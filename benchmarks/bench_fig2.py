@@ -1,0 +1,30 @@
+"""Fig. 2: communication cost to reach target accuracy vs undependability."""
+from benchmarks.common import QUICK, emit, standard_setup, timed_run
+
+
+def run():
+    rates = [0.1, 0.3, 0.6] if QUICK else [0.1, 0.2, 0.3, 0.4, 0.5, 0.6]
+    # dependable baseline target
+    sim, fl, data = standard_setup(undep_means=(0.02, 0.02, 0.02), group_mode="class")
+    h0, _ = timed_run("random", data, sim, fl)
+    target = min(0.9 * h0.acc[-1], 0.9)
+    base_comm = h0.comm_to_accuracy(target)
+    out = {"target": target, "dependable_comm": base_comm, "rates": rates,
+           "comm": []}
+    for r in rates:
+        sim, fl, data = standard_setup(undep_means=(r, r, r), group_mode="class")
+        h, w = timed_run("random", data, sim, fl)
+        c = h.comm_to_accuracy(target)
+        out["comm"].append(c)
+        rel = c / base_comm if base_comm > 0 else float("inf")
+        emit(f"fig2_rate{int(r * 100)}", w * 1e6 / sim.rounds,
+             f"comm_mb={c:.0f};vs_dependable={rel:.2f}x")
+    emit("fig2_summary", 0.0,
+         f"comm_inflation_at_60pct="
+         f"{(out['comm'][-1] / base_comm if base_comm else 0):.2f}x",
+         record=out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+"""Fig. 5: communication cost to target accuracy, all five methods."""
+from benchmarks.common import emit, standard_setup, timed_run
+
+METHODS = ["asyncfeded", "safa", "fedsea", "oort", "flude"]
+
+
+def run():
+    sim, fl, data = standard_setup()
+    hs = {m: timed_run(m, data, sim, fl)[0] for m in METHODS}
+    target = min(h.acc[-1] for h in hs.values()) * 0.97
+    out = {}
+    for m in METHODS:
+        c = hs[m].comm_to_accuracy(target)
+        out[m] = c
+        emit(f"fig5_{m}", 0.0, f"comm_mb={c:.0f}")
+    best_base = min(v for k, v in out.items() if k != "flude")
+    emit("fig5_summary", 0.0,
+         f"flude_comm_reduction="
+         f"{(1 - out['flude'] / best_base) * 100:.1f}pct",
+         record=out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

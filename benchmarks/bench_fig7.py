@@ -1,0 +1,23 @@
+"""Fig. 7: model distributor ablation (full / adaptive / least)."""
+from benchmarks.common import emit, replace, standard_setup, timed_run
+
+
+def run():
+    sim, fl, data = standard_setup()
+    out = {}
+    for mode in ("full", "adaptive", "least"):
+        h, w = timed_run("flude", data, sim,
+                         replace(fl, distribution_mode=mode))
+        out[mode] = {"acc": h.acc[-1], "comm_mb": h.comm_mb[-1]}
+        emit(f"fig7_{mode}", w * 1e6 / sim.rounds,
+             f"acc={h.acc[-1]:.4f};comm_mb={h.comm_mb[-1]:.0f}")
+    emit("fig7_summary", 0.0,
+         f"adaptive_saves_vs_full="
+         f"{(1 - out['adaptive']['comm_mb'] / max(out['full']['comm_mb'], 1e-9)) * 100:.1f}pct;"
+         f"acc_drop_vs_full={out['full']['acc'] - out['adaptive']['acc']:.4f}",
+         record=out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

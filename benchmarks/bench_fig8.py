@@ -1,0 +1,30 @@
+"""Fig. 8: robustness to device offline rates (online rate 0.5/0.3/0.1)."""
+import dataclasses
+
+from benchmarks.common import emit, standard_setup, timed_run
+from repro.fl import Fleet
+
+
+def run():
+    out = {}
+    for level, rate in (("low", 0.5), ("medium", 0.3), ("high", 0.1)):
+        sim, fl, data = standard_setup()
+        sim = dataclasses.replace(sim, online_low=rate * 0.8,
+                                  online_high=rate * 1.2)
+        accs = {}
+        for m in ("flude", "oort"):
+            h, w = timed_run(m, data, sim, fl)
+            accs[m] = h.acc[-1]
+        out[level] = accs
+        emit(f"fig8_{level}", w * 1e6 / sim.rounds,
+             f"flude={accs['flude']:.4f};oort={accs['oort']:.4f}")
+    degr_f = out["low"]["flude"] - out["high"]["flude"]
+    degr_o = out["low"]["oort"] - out["high"]["oort"]
+    emit("fig8_summary", 0.0,
+         f"flude_degradation={degr_f:.4f};oort_degradation={degr_o:.4f}",
+         record=out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,24 @@
+"""Fig. 9: robustness to undependability level (0.2/0.4/0.6) vs Oort."""
+from benchmarks.common import emit, standard_setup, timed_run
+
+
+def run():
+    out = {}
+    for level, mean in (("low", 0.2), ("medium", 0.4), ("high", 0.6)):
+        sim, fl, data = standard_setup(undep_means=(mean, mean, mean))
+        accs = {}
+        for m in ("flude", "oort"):
+            h, w = timed_run(m, data, sim, fl)
+            accs[m] = h.acc[-1]
+        out[level] = accs
+        emit(f"fig9_{level}", w * 1e6 / sim.rounds,
+             f"flude={accs['flude']:.4f};oort={accs['oort']:.4f}")
+    emit("fig9_summary", 0.0,
+         f"flude_drop={out['low']['flude'] - out['high']['flude']:.4f};"
+         f"oort_drop={out['low']['oort'] - out['high']['oort']:.4f}",
+         record=out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,88 @@
+"""Kernel micro-benchmarks: XLA-path wall time on CPU + correctness gap.
+
+(True TPU timings are out of reach in this container; interpret-mode Pallas
+timing is NOT representative and is excluded from the perf narrative — the
+roofline analysis covers the hardware story.  This bench times the XLA
+reference path and records kernel-vs-oracle max error.)
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels.fed_agg.ops import fed_agg
+from repro.kernels.fed_agg.ref import fed_agg_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+from repro.kernels.ssm_scan.ops import ssm_scan
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def run():
+    rng = np.random.RandomState(0)
+
+    # flash attention (XLA ref timing + kernel error)
+    B, Hq, Hkv, S, D = 1, 8, 2, 512, 64
+    q = jnp.asarray(rng.randn(B, Hq, S, D), jnp.float32)
+    k = jnp.asarray(rng.randn(B, Hkv, S, D), jnp.float32)
+    v = jnp.asarray(rng.randn(B, Hkv, S, D), jnp.float32)
+    ref = jax.jit(lambda *a: attention_ref(*a, causal=True))
+    us = _time(ref, q, k, v)
+    got = flash_attention(q, k, v, causal=True, impl="pallas_interpret")
+    err = float(jnp.abs(got - ref(q, k, v)).max())
+    emit("kernel_flash_attention", us, f"maxerr={err:.2e};shape=B1H8S512D64")
+
+    # ssm scan
+    B, S, H, P, N = 1, 512, 4, 64, 64
+    x = jnp.asarray(rng.randn(B, S, H, P), jnp.float32)
+    dt = jnp.asarray(rng.rand(B, S, H) * 0.5, jnp.float32)
+    A = jnp.asarray(-rng.rand(H) - 0.1, jnp.float32)
+    Bm = jnp.asarray(rng.randn(B, S, 1, N), jnp.float32)
+    Cm = jnp.asarray(rng.randn(B, S, 1, N), jnp.float32)
+    ref_fn = jax.jit(lambda *a: ssm_scan(*a, impl="xla"))
+    us = _time(ref_fn, x, dt, A, Bm, Cm)
+    y1, h1 = ssm_scan(x, dt, A, Bm, Cm, impl="pallas_interpret", chunk=128)
+    y2, h2 = ref_fn(x, dt, A, Bm, Cm)
+    emit("kernel_ssm_scan", us,
+         f"maxerr={float(jnp.abs(y1 - y2).max()):.2e};shape=S512H4P64N64")
+
+    # rwkv6
+    B, H, S, D = 1, 4, 256, 64
+    r = jnp.asarray(rng.randn(B, H, S, D) * .5, jnp.float32)
+    kk = jnp.asarray(rng.randn(B, H, S, D) * .5, jnp.float32)
+    vv = jnp.asarray(rng.randn(B, H, S, D) * .5, jnp.float32)
+    lw = jnp.asarray(-np.exp(rng.randn(B, H, S, D) * .5), jnp.float32)
+    u = jnp.asarray(rng.randn(H, D) * .3, jnp.float32)
+    ref_fn = jax.jit(lambda *a: rwkv6_scan(*a, impl="xla"))
+    us = _time(ref_fn, r, kk, vv, lw, u)
+    y1, s1 = rwkv6_scan(r, kk, vv, lw, u, impl="pallas_interpret", chunk=64)
+    y2, s2 = ref_fn(r, kk, vv, lw, u)
+    emit("kernel_rwkv6_scan", us,
+         f"maxerr={float(jnp.abs(y1 - y2).max()):.2e};shape=S256H4D64")
+
+    # fed_agg
+    C, Dm = 64, 1 << 16
+    up = jnp.asarray(rng.randn(C, Dm), jnp.float32)
+    w = jnp.asarray(rng.rand(C), jnp.float32)
+    ref_fn = jax.jit(fed_agg_ref)
+    us = _time(ref_fn, up, w)
+    got = fed_agg(up, w, impl="pallas_interpret")
+    emit("kernel_fed_agg", us,
+         f"maxerr={float(jnp.abs(got - ref_fn(up, w)).max()):.2e};"
+         f"shape=C64D65536")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Deliverable (g): collate dry-run JSONs into the roofline table."""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.roofline.analysis import format_table
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_rows():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if "roofline" in rec:
+            r = dict(rec["roofline"])
+            r["peak_gb"] = rec["memory"]["peak_gb"]
+            r["compile_s"] = rec["compile_s"]
+            rows.append(r)
+        elif "skipped" in rec:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": "-", "skipped": rec["skipped"]})
+    return rows
+
+
+def run():
+    rows = load_rows()
+    ok = [r for r in rows if "skipped" not in r and "compute_s" in r]
+    skipped = [r for r in rows if "skipped" in r]
+    for r in ok:
+        emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+             r["compile_s"] * 1e6,
+             f"dominant={r['dominant']};c={r['compute_s']:.3g};"
+             f"m={r['memory_s']:.3g};coll={r['collective_s']:.3g};"
+             f"useful={r['useful_flops_fraction']:.3f};"
+             f"peak_gb={r['peak_gb']:.1f}")
+    emit("roofline_matrix", 0.0,
+         f"lowered={len(ok)};skipped={len(skipped)}",
+         record={"rows": rows, "table": format_table(ok)})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

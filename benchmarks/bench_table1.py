@@ -1,0 +1,69 @@
+"""Table 1: final accuracy/AUC + time-to-accuracy + comm, all five methods.
+
+Two task rows mirror the paper's spread: classification (CIFAR/Speech
+analogue, accuracy) and CTR recommendation (Avazu analogue, AUC).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import TIME_BUDGET, emit, standard_setup, timed_run
+from repro.configs.base import FLConfig
+from repro.data.synthetic import auc, ctr_dataset
+from repro.fl import SimConfig, run_fl
+from repro.fl import classifier as CLF
+
+METHODS = ["asyncfeded", "safa", "fedsea", "oort", "flude"]
+
+
+def run_ctr():
+    n = 48
+    data = ctr_dataset(n, seed=11)
+    sim = SimConfig(num_clients=n, rounds=250, seed=11, local_steps=6)
+    fl = FLConfig(num_clients=n, clients_per_round=10)
+    out = {}
+    for m in METHODS:
+        h, _ = timed_run(m, data, sim, fl)
+        scores = np.asarray(CLF.clf_logits(
+            h.final_params, jnp.asarray(data.test_x)))[:, 1]
+        out[m] = {"auc": auc(scores, data.test_y),
+                  "comm_mb": h.comm_mb[-1], "rounds": len(h.acc)}
+        emit(f"table1_ctr_{m}", 0.0,
+             f"auc={out[m]['auc']:.4f};comm_mb={out[m]['comm_mb']:.0f}")
+    emit("table1_ctr_summary", 0.0,
+         f"flude_auc_rank="
+         f"{sorted(out, key=lambda k: -out[k]['auc']).index('flude') + 1}"
+         f"/5", record=out)
+    return out
+
+
+def run():
+    sim, fl, data = standard_setup()
+    results = {}
+    for m in METHODS:
+        h, wall = timed_run(m, data, sim, fl)
+        results[m] = {"acc": h.acc[-1], "wall_clock": h.wall_clock[-1],
+                      "comm_mb": h.comm_mb[-1], "acc_curve": h.acc,
+                      "time_curve": h.wall_clock,
+                      "comm_curve": h.comm_mb, "bench_s": wall}
+    # target = weakest final accuracy (paper's fair-comparison rule)
+    target = min(r["acc"] for r in results.values())
+    for m in METHODS:
+        h_t = next((t for t, a in zip(results[m]["time_curve"],
+                                      results[m]["acc_curve"])
+                    if a >= target), float("inf"))
+        results[m]["time_to_target"] = h_t
+        emit(f"table1_{m}",
+             results[m]["bench_s"] * 1e6 / sim.rounds,
+             f"acc={results[m]['acc']:.4f};tta_s={h_t:.0f};"
+             f"comm_mb={results[m]['comm_mb']:.0f}")
+    results["ctr"] = run_ctr()
+    results["target_acc"] = target
+    emit("table1_summary", 0.0,
+         f"flude_speedup_vs_best_baseline="
+         f"{min(results[m]['time_to_target'] for m in METHODS[:-1]) / max(results['flude']['time_to_target'], 1e-9):.2f}x",
+         record=results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

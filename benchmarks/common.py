@@ -1,0 +1,61 @@
+"""Shared benchmark scaffolding: standard fleet/task setups + CSV output.
+
+Every bench mirrors one paper artifact (Table 1, Figs. 1/2/5/6/7/8/9) on the
+synthetic classification task (the paper's CIFAR/Speech stand-in, see
+DESIGN.md §3).  Results print as ``name,us_per_call,derived`` CSV rows and
+are archived under results/benchmarks/.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+from repro.configs.base import FLConfig
+from repro.data.synthetic import federated_classification
+from repro.fl import SimConfig, run_fl
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "benchmarks")
+
+QUICK = bool(int(os.environ.get("BENCH_QUICK", "0")))
+
+
+# simulated-time budget: the paper's comparison regime — every method gets
+# the same wall clock; faster policies fit more rounds (Table 1 "Time").
+TIME_BUDGET = 4000.0 if QUICK else 10800.0
+
+
+def standard_setup(num_clients=60, rounds=None, seed=7,
+                   undep_means=(0.2, 0.4, 0.6), group_mode="random",
+                   **data_kw):
+    rounds = rounds or (60 if QUICK else 250)
+    sim = SimConfig(num_clients=num_clients, rounds=rounds, seed=seed,
+                    undep_means=undep_means, local_steps=6,
+                    group_mode=group_mode)
+    fl = FLConfig(num_clients=num_clients,
+                  clients_per_round=max(num_clients // 5, 8))
+    kw = dict(seed=seed + 1, margin=1.0, noise=1.6, n_per_client=48)
+    kw.update(data_kw)
+    data = federated_classification(num_clients, **kw)
+    return sim, fl, data
+
+
+def timed_run(policy, data, sim, fl, time_budget=None):
+    t0 = time.time()
+    h = run_fl(policy, data, sim, fl,
+               time_budget=time_budget or TIME_BUDGET)
+    return h, time.time() - t0
+
+
+def emit(name: str, us_per_call: float, derived, record=None):
+    print(f"{name},{us_per_call:.1f},{derived}")
+    if record is not None:
+        os.makedirs(RESULTS, exist_ok=True)
+        with open(os.path.join(RESULTS, f"{name}.json"), "w") as f:
+            json.dump(record, f, indent=1, default=float)
+
+
+def replace(obj, **kw):
+    return dataclasses.replace(obj, **kw)

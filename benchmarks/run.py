@@ -1,0 +1,55 @@
+"""Benchmark harness: one bench per paper table/figure + kernels + roofline.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+Output: ``name,us_per_call,derived`` CSV rows (also archived under
+results/benchmarks/).
+"""
+import argparse
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer rounds/settings per bench")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    if args.quick:
+        os.environ["BENCH_QUICK"] = "1"
+
+    from benchmarks import (bench_ablation_selector, bench_beyond,
+                            bench_fig1, bench_fig2, bench_fig5, bench_fig7,
+                            bench_fig8, bench_fig9, bench_kernels,
+                            bench_roofline, bench_table1)
+    benches = {
+        "table1": bench_table1,
+        "fig1": bench_fig1,
+        "fig2": bench_fig2,
+        "fig5": bench_fig5,
+        "ablation_selector": bench_ablation_selector,
+        "fig7": bench_fig7,
+        "fig8": bench_fig8,
+        "fig9": bench_fig9,
+        "beyond_selection": bench_beyond,
+        "kernels": bench_kernels,
+        "roofline": bench_roofline,
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in benches.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            mod.run()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

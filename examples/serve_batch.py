@@ -1,0 +1,18 @@
+"""Batched serving example: prefill + decode with any assigned arch.
+
+    PYTHONPATH=src python examples/serve_batch.py [arch]
+"""
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "qwen2-7b"
+    sys.argv = [sys.argv[0], "--arch", arch, "--reduced", "--batch", "4",
+                "--prompt-len", "64", "--decode-tokens", "16"]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""End-to-end driver: federated-train a causal LM with FLUDE (paper kind:
+training).  Defaults to a quick 5M-param run; use --scale 100m for the
+~100M-parameter configuration.
+
+    PYTHONPATH=src python examples/train_lm_federated.py --rounds 200
+    PYTHONPATH=src python examples/train_lm_federated.py --scale 100m \
+        --rounds 300     # full driver (slower on CPU)
+"""
+import sys
+
+from repro.launch import train
+
+
+def main():
+    if "--rounds" not in " ".join(sys.argv):
+        sys.argv += ["--rounds", "100"]
+    train.main()
+
+
+if __name__ == "__main__":
+    main()

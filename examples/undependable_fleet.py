@@ -1,0 +1,38 @@
+"""Reproduce the paper's §2.2 motivation: how undependability hurts FL.
+
+Sweeps the undependability rate and reports final accuracy + comm cost for
+vanilla FedAvg, then shows FLUDE recovering the loss at 40%.
+
+    PYTHONPATH=src python examples/undependable_fleet.py
+"""
+import dataclasses
+
+from repro.configs.base import FLConfig
+from repro.data.synthetic import federated_classification
+from repro.fl import SimConfig, run_fl
+
+
+def main():
+    n = 60
+    fl = FLConfig(num_clients=n, clients_per_round=15)
+    data = federated_classification(n, seed=1, margin=1.4, noise=1.3)
+
+    print("== FedAvg under increasing undependability (paper Fig. 1a) ==")
+    for rate in (0.05, 0.2, 0.4, 0.6):
+        sim = SimConfig(num_clients=n, rounds=30, seed=0,
+                        undep_means=(rate,) * 3)
+        h = run_fl("random", data, sim, fl)
+        print(f"  undependability {rate:.0%}: acc {h.acc[-1]:.4f}  "
+              f"comm {h.comm_mb[-1]:6.0f} MB")
+
+    print("== FLUDE at 40% undependability ==")
+    sim = SimConfig(num_clients=n, rounds=30, seed=0,
+                    undep_means=(0.4,) * 3)
+    for policy in ("random", "flude"):
+        h = run_fl(policy, data, sim, fl)
+        print(f"  {policy:8s}: acc {h.acc[-1]:.4f}  "
+              f"comm {h.comm_mb[-1]:6.0f} MB  wall {h.wall_clock[-1]:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

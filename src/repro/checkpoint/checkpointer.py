@@ -1,0 +1,75 @@
+"""msgpack pytree checkpointer (server checkpoints + client cache persistence).
+
+Arrays are serialized as (dtype, shape, raw bytes); the tree structure is
+encoded with string-keyed maps / lists / namedtuple names so round-tripping
+restores the exact pytree (leaves come back as numpy; callers jnp-ify).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode(obj):
+    if isinstance(obj, (jnp.ndarray, np.ndarray)) or hasattr(obj, "dtype"):
+        arr = np.asarray(obj)
+        return {"__arr__": True, "dtype": str(arr.dtype),
+                "shape": list(arr.shape), "data": arr.tobytes()}
+    if isinstance(obj, dict):
+        return {"__map__": {k: _encode(v) for k, v in obj.items()}}
+    if hasattr(obj, "_fields"):        # namedtuple
+        return {"__nt__": type(obj).__name__,
+                "fields": {f: _encode(getattr(obj, f))
+                           for f in obj._fields}}
+    if isinstance(obj, (list, tuple)):
+        return {"__seq__": [_encode(v) for v in obj],
+                "tuple": isinstance(obj, tuple)}
+    if obj is None or isinstance(obj, (int, float, str, bool)):
+        return {"__lit__": obj}
+    raise TypeError(f"cannot checkpoint {type(obj)}")
+
+
+def _decode(obj):
+    if "__arr__" in obj:
+        arr = np.frombuffer(obj["data"], dtype=obj["dtype"])
+        return arr.reshape(obj["shape"]).copy()
+    if "__map__" in obj:
+        return {k: _decode(v) for k, v in obj["__map__"].items()}
+    if "__nt__" in obj:
+        # restored as plain dict of fields: callers re-wrap if needed
+        return {f: _decode(v) for f, v in obj["fields"].items()}
+    if "__seq__" in obj:
+        vals = [_decode(v) for v in obj["__seq__"]]
+        return tuple(vals) if obj.get("tuple") else vals
+    return obj["__lit__"]
+
+
+def save(path: str, tree: Any) -> None:
+    tmp = path + ".tmp"
+    host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(_encode(host_tree), use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore(path: str) -> Any:
+    with open(path, "rb") as f:
+        return _decode(msgpack.unpackb(f.read(), raw=False,
+                                       strict_map_key=False))
+
+
+def restore_like(path: str, template: Any) -> Any:
+    """Restore and re-shape into the template's pytree structure (casting
+    dtypes and re-wrapping namedtuples)."""
+    raw = restore(path)
+    flat_raw = jax.tree.leaves(raw)
+    t_leaves, treedef = jax.tree.flatten(template)
+    assert len(flat_raw) == len(t_leaves), "checkpoint/template mismatch"
+    leaves = [jnp.asarray(r, t.dtype) if hasattr(t, "dtype") else r
+              for r, t in zip(flat_raw, t_leaves)]
+    return jax.tree.unflatten(treedef, leaves)

@@ -1,0 +1,22 @@
+"""nemotron-4-340b — dense GQA with squared-ReLU MLP.
+
+[arXiv:2402.16819] 96L d_model=18432 96H (GQA kv=8) d_ff=73728 vocab=256000.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-340b",
+    arch_type="dense",
+    source="arXiv:2402.16819",
+    num_layers=96,
+    d_model=18432,
+    num_heads=96,
+    num_kv_heads=8,
+    d_ff=73728,
+    vocab_size=256000,
+    head_dim=192,
+    attention="gqa",
+    mlp_act="relu2",           # squared-ReLU, no gating
+    norm="layernorm",
+    rope_theta=10000.0,
+)

@@ -1,0 +1,17 @@
+"""FLUDE core — the paper's contribution (C1–C5), as composable JAX modules."""
+from repro.core.dependability import (BetaBelief, dependability, init_belief,
+                                      sample_dependability, update_belief,
+                                      variance)
+from repro.core.selection import (SelectionResult, decay_epsilon,
+                                  freq_threshold, priority,
+                                  select_participants)
+from repro.core.caching import (ClientCaches, adaptive_cache_interval,
+                                clear_cache, has_cache, init_caches,
+                                resume_params, staleness, write_cache)
+from repro.core.distribution import (DistributionPlan, DistributorState,
+                                     init_distributor, plan_distribution,
+                                     predicted_comm_cost)
+from repro.core.aggregation import (aggregation_weights, fed_aggregate,
+                                    fed_aggregate_delta)
+from repro.core.round import (FludeState, RoundPlan, init_state, plan_round,
+                              receive_quorum, update_after_round)

@@ -1,0 +1,72 @@
+"""Server-side model aggregation (FedAvg-compatible, masked + weighted).
+
+The received-set mask realizes FLUDE's semantics: devices that became
+undependable contribute *zero* (they never uploaded).  Optional staleness
+discounting down-weights updates that started from stale cached models
+(cited staleness handling, e.g. refs [28–32] in the paper).
+
+``fed_aggregate`` operates on leading-axis-stacked updates (N, ...) —
+this is the hot-spot the ``repro.kernels.fed_agg`` Pallas kernel tiles.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def aggregation_weights(received: jax.Array,
+                        n_samples: Optional[jax.Array] = None,
+                        staleness: Optional[jax.Array] = None,
+                        staleness_discount: float = 0.0) -> jax.Array:
+    """Per-client aggregation weights.
+
+    received: (N,) bool — uploaded this round.
+    n_samples: (N,) — local dataset sizes (FedAvg weighting).
+    staleness: (N,) — rounds of staleness of the base model trained from.
+    """
+    w = received.astype(jnp.float32)
+    if n_samples is not None:
+        w = w * n_samples.astype(jnp.float32)
+    if staleness is not None and staleness_discount > 0.0:
+        w = w * jnp.power(1.0 + jnp.maximum(staleness, 0.0),
+                          -staleness_discount)
+    return w
+
+
+def fed_aggregate(global_params: Any, client_params: Any,
+                  weights: jax.Array, *, kernel=None) -> Any:
+    """Weighted average of client models; falls back to the previous global
+    model when nobody reported (Σw == 0).
+
+    client_params leaves: (N, ...) stacked.  ``kernel`` optionally points at
+    repro.kernels.fed_agg.ops.fed_agg for the Pallas path.
+    """
+    total = jnp.maximum(weights.sum(), 1e-30)
+    any_received = weights.sum() > 0
+
+    def agg(g, c):
+        if kernel is not None:
+            avg = kernel(c, weights / total)
+        else:
+            wshape = (-1,) + (1,) * (c.ndim - 1)
+            avg = (c.astype(jnp.float32)
+                   * (weights / total).reshape(wshape)).sum(0)
+        return jnp.where(any_received, avg.astype(g.dtype), g)
+
+    return jax.tree.map(agg, global_params, client_params)
+
+
+def fed_aggregate_delta(global_params: Any, client_params: Any,
+                        weights: jax.Array, server_lr: float = 1.0) -> Any:
+    """FedOpt-style: aggregate client *deltas* and apply with a server LR."""
+    total = jnp.maximum(weights.sum(), 1e-12)
+
+    def agg(g, c):
+        wshape = (-1,) + (1,) * (c.ndim - 1)
+        delta = ((c.astype(jnp.float32) - g.astype(jnp.float32)[None])
+                 * (weights / total).reshape(wshape)).sum(0)
+        return (g.astype(jnp.float32) + server_lr * delta).astype(g.dtype)
+
+    return jax.tree.map(agg, global_params, client_params)

@@ -1,0 +1,92 @@
+"""C3 — local model caching (paper §4.2).
+
+Each device keeps a *rolling single-slot* cache of its latest local training
+state (model params, progress fraction, round stamp).  When an interrupted
+device rejoins, it resumes from the cache unless the server's staleness-aware
+distributor (C4) overrides it with a fresh global model.
+
+In cross-device mode the fleet's caches are a leading-axis-stacked pytree
+(N_clients first dim on every leaf) so cache update/resume are pure
+``jnp.where`` ops that shard over the client mesh axes.  In cross-silo mode
+(huge models) only the metadata (progress, round stamp) is kept — see
+DESIGN.md §3 hardware adaptation.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ClientCaches(NamedTuple):
+    params: Any              # pytree, each leaf (N, ...) — cached local state
+    progress: jax.Array      # (N,) float32 in [0,1] — fraction completed
+    round_stamp: jax.Array   # (N,) int32 — round when cached (-1 = empty)
+
+
+def init_caches(template_params, num_clients: int) -> ClientCaches:
+    stacked = jax.tree.map(
+        lambda a: jnp.zeros((num_clients,) + a.shape, a.dtype),
+        template_params)
+    return ClientCaches(
+        stacked,
+        jnp.zeros((num_clients,), jnp.float32),
+        jnp.full((num_clients,), -1, jnp.int32))
+
+
+def write_cache(caches: ClientCaches, mask: jax.Array, new_params,
+                progress: jax.Array, rnd) -> ClientCaches:
+    """Rolling update: overwrite the slot for masked clients (latest only).
+
+    new_params leaves are (N, ...) stacked local states.
+    """
+    def upd(old, new):
+        m = mask.reshape((-1,) + (1,) * (old.ndim - 1))
+        return jnp.where(m, new.astype(old.dtype), old)
+
+    return ClientCaches(
+        jax.tree.map(upd, caches.params, new_params),
+        jnp.where(mask, progress, caches.progress),
+        jnp.where(mask, jnp.asarray(rnd, jnp.int32), caches.round_stamp))
+
+
+def clear_cache(caches: ClientCaches, mask: jax.Array) -> ClientCaches:
+    """After a successful upload the local cache slot is invalidated."""
+    return ClientCaches(
+        caches.params,
+        jnp.where(mask, 0.0, caches.progress),
+        jnp.where(mask, -1, caches.round_stamp))
+
+
+def staleness(caches: ClientCaches, current_round) -> jax.Array:
+    """Rounds elapsed since the cache was written (∞-ish if empty)."""
+    empty = caches.round_stamp < 0
+    s = (jnp.asarray(current_round, jnp.int32) - caches.round_stamp)
+    return jnp.where(empty, jnp.int32(1 << 20), s).astype(jnp.float32)
+
+
+def has_cache(caches: ClientCaches) -> jax.Array:
+    return caches.round_stamp >= 0
+
+
+def resume_params(caches: ClientCaches, global_params, use_cache_mask):
+    """Per-client starting state: cached params where resuming, else the
+    fresh global model (broadcast).  Leaves: (N, ...)."""
+    def pick(cached, g):
+        m = use_cache_mask.reshape((-1,) + (1,) * (cached.ndim - 1))
+        return jnp.where(m, cached, g[None].astype(cached.dtype))
+
+    return jax.tree.map(pick, caches.params, global_params)
+
+
+def adaptive_cache_interval(base_interval, battery: jax.Array,
+                            stability: jax.Array) -> jax.Array:
+    """§4.2 "adjusting caching frequency": lower battery / flakier network
+    ⇒ cache more often (smaller interval); stable+charged ⇒ less often.
+
+    battery, stability ∈ [0, 1].  Returns per-device seconds, clamped to
+    [base/2, 5·base] (paper's examples: 30 s … 5 min around a 1-min base).
+    """
+    scale = jnp.clip(2.0 * battery * stability, 0.5, 5.0)
+    return base_interval * scale

@@ -1,0 +1,53 @@
+"""C1 — device dependability assessment (paper §4.1, Eq. 1).
+
+Each device's probability of successfully completing a training round is
+modeled as a Beta(α, β) posterior updated by Bayes' rule on observed
+successes/failures:
+
+    α_new = α + s,   β_new = β + f,   E[R(i)] = α_new / (α_new + β_new)
+
+The fleet posterior is a pair of (N,) arrays — a jit-able pytree.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class BetaBelief(NamedTuple):
+    alpha: jax.Array     # (N,) float32
+    beta: jax.Array      # (N,) float32
+
+
+def init_belief(num_devices: int, alpha0: float = 2.0,
+                beta0: float = 2.0) -> BetaBelief:
+    """Neutral prior Beta(2, 2) — "neither dependable nor undependable"."""
+    return BetaBelief(
+        jnp.full((num_devices,), alpha0, jnp.float32),
+        jnp.full((num_devices,), beta0, jnp.float32))
+
+
+def update_belief(belief: BetaBelief, successes: jax.Array,
+                  failures: jax.Array) -> BetaBelief:
+    """Eq. (1): add per-device success/failure counts (int or bool arrays)."""
+    return BetaBelief(
+        belief.alpha + successes.astype(jnp.float32),
+        belief.beta + failures.astype(jnp.float32))
+
+
+def dependability(belief: BetaBelief) -> jax.Array:
+    """E[R(i)] = α / (α + β)  — the per-device dependability estimate."""
+    return belief.alpha / (belief.alpha + belief.beta)
+
+
+def variance(belief: BetaBelief) -> jax.Array:
+    """Posterior variance — used by tests / exploration heuristics."""
+    a, b = belief.alpha, belief.beta
+    return a * b / ((a + b) ** 2 * (a + b + 1.0))
+
+
+def sample_dependability(belief: BetaBelief, rng) -> jax.Array:
+    """Thompson sample R(i) ~ Beta(α_i, β_i) (optional selection variant)."""
+    return jax.random.beta(rng, belief.alpha, belief.beta)

@@ -1,0 +1,90 @@
+"""C4 — staleness-aware model distribution (paper §4.3, Eq. 4).
+
+Selected devices split into:
+  U — completed last participation (or never selected): always get the
+      fresh global model;
+  V — failed last participation and hold a local cache: get the fresh model
+      only if their cache staleness exceeds the adaptive threshold W.
+
+Threshold adaptation (Eq. 4):
+  W'  = W_old · (1 − λ·(H_new − H_old)/H_old)      — staleness pressure
+  W   = W'   · (1 + μ·(N_new − N_old)/N_old)       — comm-cost pressure
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DistributorState(NamedTuple):
+    w_threshold: jax.Array   # scalar float32 — W
+    h_old: jax.Array         # scalar — previous average staleness
+    n_old: jax.Array         # scalar — previous distribution count
+
+
+class DistributionPlan(NamedTuple):
+    distribute: jax.Array    # (N,) bool — S_distr (receive fresh global)
+    resume: jax.Array        # (N,) bool — train from local cache
+    state: DistributorState  # updated threshold state
+    avg_staleness: jax.Array
+
+
+def init_distributor(w_init: float = 3.0) -> DistributorState:
+    return DistributorState(jnp.float32(w_init), jnp.float32(0.0),
+                            jnp.float32(1.0))
+
+
+def plan_distribution(state: DistributorState, selected: jax.Array,
+                      in_v: jax.Array, has_cache: jax.Array,
+                      staleness: jax.Array, *, lam: float, mu: float,
+                      w_min: float, w_max: float,
+                      mode: str = "adaptive") -> DistributionPlan:
+    """Decide who receives the fresh global model this round.
+
+    selected:  (N,) bool — S (Algorithm 1 output)
+    in_v:      (N,) bool — failed their last participation
+    has_cache: (N,) bool — hold a valid local cache
+    staleness: (N,) float — rounds since their cache was written
+    """
+    cacheable = selected & in_v & has_cache
+
+    if mode == "full":
+        distribute = selected
+        resume = jnp.zeros_like(selected)
+        return DistributionPlan(distribute, resume, state,
+                                jnp.float32(0.0))
+    if mode == "least":
+        resume = cacheable
+        distribute = selected & ~resume
+        return DistributionPlan(distribute, resume, state,
+                                jnp.float32(0.0))
+
+    # --- adaptive (Eq. 4) -------------------------------------------------
+    nv = jnp.maximum(cacheable.sum(), 1)
+    h_new = jnp.where(cacheable, staleness, 0.0).sum() / nv
+
+    w_old, h_old, n_old = state
+    # first observation (h_old == 0): no staleness pressure yet
+    h_ref = jnp.where(h_old > 0, h_old, jnp.maximum(h_new, 1e-3))
+    delta_h = jnp.where(h_old > 0, h_new - h_old, 0.0)
+    w_prime = w_old * (1.0 - lam * delta_h / h_ref)
+    n_new = (cacheable & (staleness > w_prime)).sum().astype(jnp.float32)
+    n_ref = jnp.maximum(n_old, 1.0)
+    w_new = w_prime * (1.0 + mu * (n_new - n_old) / n_ref)
+    w_new = jnp.clip(w_new, w_min, w_max)
+
+    too_stale = staleness > w_new
+    resume = cacheable & ~too_stale
+    distribute = selected & ~resume
+    new_state = DistributorState(w_new, h_new, n_new)
+    return DistributionPlan(distribute, resume, new_state, h_new)
+
+
+def predicted_comm_cost(distribute: jax.Array, selected: jax.Array,
+                        avg_dependability) -> jax.Array:
+    """Algorithm 2 line 11: B_pred = |S_distr| + |S| · R̄  (model-transmission
+    units: downloads actually sent + uploads expected back)."""
+    return (distribute.sum().astype(jnp.float32)
+            + selected.sum().astype(jnp.float32) * avg_dependability)

@@ -1,0 +1,137 @@
+"""C5 — the FLUDE round process (paper §4.4, Algorithm 2), server side.
+
+``plan_round`` runs lines 3–12: budget-adaptive participant count X,
+Algorithm-1 selection, staleness-aware distribution, predicted comm cost.
+``update_after_round`` runs the post-aggregation bookkeeping: Beta-posterior
+updates (Eq. 1), participation counters (Eq. 3 numerator), U/V membership,
+ε decay.  Both are pure jnp over fixed-shape fleet arrays.
+
+Round *termination* (lines 13–16: first |S|·R̄ uploads or deadline T) is a
+wall-clock matter and lives in ``repro.fl.simulator``/the launcher, which
+call ``receive_quorum`` below for the cutoff count.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+from repro.core import caching as C
+from repro.core import distribution as D
+from repro.core import selection as SEL
+from repro.core.dependability import BetaBelief, dependability, init_belief
+
+
+class FludeState(NamedTuple):
+    """Full server-side fleet state (a jit-able pytree)."""
+    belief: BetaBelief
+    part_count: jax.Array       # (N,) int32 — q_i
+    explored: jax.Array         # (N,) bool — C
+    in_v: jax.Array             # (N,) bool — failed last participation
+    distributor: D.DistributorState
+    epsilon: jax.Array          # scalar
+    total_selected: jax.Array   # scalar — Σ_k |S_k|
+    round: jax.Array            # scalar int32
+
+
+class RoundPlan(NamedTuple):
+    selected: jax.Array         # (N,) bool — S
+    distribute: jax.Array       # (N,) bool — S_distr (fresh global model)
+    resume: jax.Array           # (N,) bool — train from local cache
+    predicted_cost: jax.Array   # scalar — B_pred (model transmissions)
+    quorum: jax.Array           # scalar — |S| · R̄ receive cutoff
+    avg_dependability: jax.Array
+    priority: jax.Array         # (N,) — P(i), for logging
+    distributor: D.DistributorState
+
+
+def init_state(cfg: FLConfig) -> FludeState:
+    return FludeState(
+        belief=init_belief(cfg.num_clients, cfg.beta_alpha0, cfg.beta_beta0),
+        part_count=jnp.zeros((cfg.num_clients,), jnp.int32),
+        explored=jnp.zeros((cfg.num_clients,), bool),
+        in_v=jnp.zeros((cfg.num_clients,), bool),
+        distributor=D.init_distributor(cfg.w_init),
+        epsilon=jnp.float32(cfg.epsilon_init),
+        total_selected=jnp.float32(0.0),
+        round=jnp.int32(0),
+    )
+
+
+def _plan_once(state: FludeState, caches: C.ClientCaches,
+               online: jax.Array, X, cfg: FLConfig, rng,
+               explore_hints=None) -> RoundPlan:
+    sel = SEL.select_participants(
+        state.belief, state.part_count, state.explored, online,
+        state.total_selected, X, state.epsilon, cfg.sigma, rng,
+        explore_hints=explore_hints, mode=cfg.selection_mode)
+    stale = C.staleness(caches, state.round)
+    plan = D.plan_distribution(
+        state.distributor, sel.selected, state.in_v, C.has_cache(caches),
+        stale, lam=cfg.lam, mu=cfg.mu, w_min=cfg.w_min, w_max=cfg.w_max,
+        mode=cfg.distribution_mode)
+    r_sel = jnp.where(sel.selected, dependability(state.belief), 0.0)
+    n_sel = jnp.maximum(sel.selected.sum(), 1)
+    r_bar = r_sel.sum() / n_sel
+    cost = D.predicted_comm_cost(plan.distribute, sel.selected, r_bar)
+    # floor: with quorum = ceil(|S|·R̄), ~half the rounds have fewer
+    # successes than the quorum and idle-wait the full deadline T —
+    # exactly the waste Algorithm 2 is designed to avoid
+    quorum = jnp.maximum(jnp.floor(sel.selected.sum() * r_bar), 1.0)
+    return RoundPlan(sel.selected, plan.distribute, plan.resume, cost,
+                     quorum, r_bar, sel.priority, plan.state)
+
+
+def plan_round(state: FludeState, caches: C.ClientCaches,
+               online: jax.Array, cfg: FLConfig, rng,
+               max_budget_iters: int = 8,
+               explore_hints=None) -> RoundPlan:
+    """Algorithm 2 lines 3–11: shrink X until B_pred ≤ B_max.
+
+    ``explore_hints``: optional (N,) device-status scores (battery ×
+    stability) biasing exploration order — §4.1's optional heuristic."""
+    X = jnp.minimum(jnp.int32(cfg.clients_per_round), online.sum())
+    plan = _plan_once(state, caches, online, X, cfg, rng, explore_hints)
+    if cfg.comm_budget == float("inf"):
+        return plan
+    b_max = jnp.float32(cfg.comm_budget)
+    for _ in range(max_budget_iters):
+        X = jnp.where(plan.predicted_cost > b_max,
+                      jnp.maximum(
+                          (X * b_max / jnp.maximum(plan.predicted_cost, 1e-9)
+                           ).astype(jnp.int32), 1),
+                      X)
+        plan = _plan_once(state, caches, online, X, cfg, rng,
+                          explore_hints)
+    return plan
+
+
+def receive_quorum(plan: RoundPlan) -> jax.Array:
+    """Line 15 cutoff: the round ends after ⌈|S|·R̄⌉ received uploads."""
+    return plan.quorum
+
+
+def update_after_round(state: FludeState, plan: RoundPlan,
+                       received: jax.Array, cfg: FLConfig) -> FludeState:
+    """Post-round bookkeeping.  received: (N,) bool — uploaded in time."""
+    sel = plan.selected
+    success = sel & received
+    failure = sel & ~received
+    belief = BetaBelief(state.belief.alpha + success.astype(jnp.float32),
+                        state.belief.beta + failure.astype(jnp.float32))
+    explored = state.explored | sel
+    in_v = jnp.where(sel, failure, state.in_v)
+    return FludeState(
+        belief=belief,
+        part_count=state.part_count + sel.astype(jnp.int32),
+        explored=explored,
+        in_v=in_v,
+        distributor=plan.distributor,
+        epsilon=SEL.decay_epsilon(state.epsilon, cfg.epsilon_decay,
+                                  cfg.epsilon_min),
+        total_selected=state.total_selected
+        + sel.sum().astype(jnp.float32),
+        round=state.round + 1,
+    )

@@ -1,0 +1,111 @@
+"""C2 — adaptive device selection (paper §4.1, Algorithm 1, Eqs. 2–3).
+
+Priority:  P(i) = R(i) · (Q / q_i)^(1(Q < q_i) · σ)       (Eq. 2)
+Threshold: Q = Σ_k |S_k| / |A|                            (Eq. 3)
+
+ε-greedy bandit: exploit the top-priority (1-ε)·X explored devices, explore
+ε·X uniformly among never-explored devices.  Everything is fixed-shape jnp
+so the whole selector jits (dynamic counts are realized as rank thresholds).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dependability import BetaBelief, dependability
+
+NEG = -1e30
+
+
+class SelectionResult(NamedTuple):
+    selected: jax.Array       # (N,) bool — S
+    exploited: jax.Array      # (N,) bool
+    explored_new: jax.Array   # (N,) bool — O (newly explored this round)
+    priority: jax.Array       # (N,) float32 — P(i) (for logging/tests)
+
+
+def freq_threshold(total_selected, num_devices) -> jax.Array:
+    """Eq. (3): average per-device frequency under uniform random picks."""
+    return total_selected / jnp.maximum(num_devices, 1)
+
+
+def priority(belief: BetaBelief, part_count: jax.Array, Q,
+             sigma: float) -> jax.Array:
+    """Eq. (2).  part_count q_i == 0 never exceeds Q, so the factor is 1."""
+    R = dependability(belief)
+    q = part_count.astype(jnp.float32)
+    ratio = jnp.where(q > 0, Q / jnp.maximum(q, 1e-9), 1.0)
+    exceeds = (q > Q).astype(jnp.float32)
+    penalty = jnp.power(jnp.maximum(ratio, 1e-9), exceeds * sigma)
+    return R * penalty
+
+
+def _rank_mask(scores: jax.Array, k) -> jax.Array:
+    """Boolean mask of the top-k scores (k may be a traced scalar)."""
+    order = jnp.argsort(-scores)
+    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(scores.shape[0]))
+    return (ranks < k) & (scores > NEG / 2)
+
+
+def select_participants(belief: BetaBelief, part_count: jax.Array,
+                        explored: jax.Array, online: jax.Array,
+                        total_selected, X, epsilon, sigma: float,
+                        rng, explore_hints=None,
+                        mode: str = "mean") -> SelectionResult:
+    """Algorithm 1.  X may be traced (budget-adapted by Algorithm 2).
+
+    - exploit (1-ε)·X among explored ∩ online, by priority (Eq. 2)
+    - explore ε·X among (not explored) ∩ online — uniformly at random, or
+      biased by ``explore_hints`` (paper §4.1: "one can also explore new
+      devices characterized by low CPU/GPU usage, high battery level":
+      higher hint ⇒ explored earlier)
+    - ``mode="thompson"`` replaces the posterior MEAN in Eq. 2 with a
+      Thompson sample R(i) ~ Beta(α_i, β_i) — a beyond-paper variant that
+      keeps probing uncertain devices even after ε decays (see
+      benchmarks/bench_beyond.py)
+    - if the explore pool is too small, the exploit share absorbs the rest
+      (and vice versa), so |S| == min(X, |online|).
+    """
+    N = online.shape[0]
+    Q = freq_threshold(total_selected, N)
+    if mode == "thompson":
+        rng, k_ts = jax.random.split(rng)
+        from repro.core.dependability import sample_dependability
+        R = sample_dependability(BetaBelief(belief.alpha, belief.beta),
+                                 k_ts)
+        q = part_count.astype(jnp.float32)
+        ratio = jnp.where(q > 0, Q / jnp.maximum(q, 1e-9), 1.0)
+        exceeds = (q > Q).astype(jnp.float32)
+        P = R * jnp.power(jnp.maximum(ratio, 1e-9), exceeds * sigma)
+    else:
+        P = priority(belief, part_count, Q, sigma)
+
+    X = jnp.minimum(X, online.sum())
+    n_explore_want = jnp.round(epsilon * X).astype(jnp.int32)
+    pool_explore = (~explored) & online
+    pool_exploit = explored & online
+    n_explore = jnp.minimum(n_explore_want, pool_explore.sum())
+    n_exploit = jnp.minimum(X - n_explore, pool_exploit.sum())
+    # re-grow explore if exploit pool was short
+    n_explore = jnp.minimum(X - n_exploit, pool_explore.sum())
+
+    exploit_scores = jnp.where(pool_exploit, P, NEG)
+    exploited = _rank_mask(exploit_scores, n_exploit)
+
+    noise = jax.random.uniform(rng, (N,))
+    if explore_hints is not None:
+        # status-aware exploration (§4.1 optional): rank by hint, noise
+        # only breaks ties
+        noise = explore_hints.astype(jnp.float32) + 0.01 * noise
+    explore_scores = jnp.where(pool_explore, noise, NEG)
+    explored_new = _rank_mask(explore_scores, n_explore)
+
+    return SelectionResult(exploited | explored_new, exploited,
+                           explored_new, P)
+
+
+def decay_epsilon(epsilon, decay: float, floor: float):
+    """Paper §5.2: ε ← ε·0.98 while ε > 0.2."""
+    return jnp.maximum(epsilon * decay, floor)

@@ -1,0 +1,2 @@
+from repro.fl.simulator import Fleet, SimConfig
+from repro.fl.runner import History, run_fl, make_trainer

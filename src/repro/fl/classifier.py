@@ -1,0 +1,65 @@
+"""Small MLP classifier for cross-device FL simulation (paper-scale models).
+
+Stands in for the paper's 5-layer CNN / VGG-9 / speech CNN: a few-10k-param
+model that 100+ simulated devices can train replicas of, exactly the paper's
+regime (≤50 MB models on phones).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def classifier_spec(dim: int = 32, hidden: int = 128,
+                    num_classes: int = 10, depth: int = 2):
+    spec = {}
+    d_in = dim
+    for i in range(depth):
+        spec[f"h{i}"] = {
+            "w": L.ParamSpec((d_in, hidden), jnp.float32,
+                             ("embed", "mlp"), "normal"),
+            "b": L.ParamSpec((hidden,), jnp.float32, ("mlp",), "zeros"),
+        }
+        d_in = hidden
+    spec["out"] = {
+        "w": L.ParamSpec((d_in, num_classes), jnp.float32,
+                         ("mlp", "vocab"), "normal"),
+        "b": L.ParamSpec((num_classes,), jnp.float32, ("vocab",), "zeros"),
+    }
+    return spec
+
+
+def init_classifier(rng, **kw):
+    return L.init_params(classifier_spec(**kw), rng)
+
+
+def clf_logits(params, x):
+    h = x
+    i = 0
+    while f"h{i}" in params:
+        h = jnp.tanh(h @ params[f"h{i}"]["w"] + params[f"h{i}"]["b"])
+        i += 1
+    return h @ params["out"]["w"] + params["out"]["b"]
+
+
+def clf_loss(params, x, y):
+    logits = clf_logits(params, x)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(lp, y[:, None], axis=-1).mean()
+
+
+def clf_accuracy(params, x, y):
+    return (clf_logits(params, x).argmax(-1) == y).mean()
+
+
+def clf_per_class_accuracy(params, x, y, num_classes: int):
+    pred = clf_logits(params, x).argmax(-1)
+    acc = []
+    for c in range(num_classes):
+        m = (y == c)
+        acc.append(jnp.where(m.sum() > 0,
+                             ((pred == y) & m).sum() / jnp.maximum(
+                                 m.sum(), 1), 0.0))
+    return jnp.stack(acc)

@@ -1,0 +1,135 @@
+"""Cross-silo FLUDE training step — the compiled multi-pod program.
+
+Each FL *client* is a data-parallel silo (one slice of the mesh along the
+(pod, data) axes).  FLUDE's per-round decisions enter the compiled step as a
+per-silo weight vector:
+
+    w_i = selected_i · dependability-derived weight · staleness discount
+
+Silos with w_i = 0 contribute exactly nothing to the gradient psum — the
+compiled realization of "an undependable device never uploads".  If no silo
+reports (Σw = 0) the global model and optimizer state pass through
+unchanged (the paper's empty-round case).  See DESIGN.md §3 for why the
+per-silo *parameter* cache is realized at data/weight granularity here.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import transformer as T
+from repro.models.model import Model
+from repro.optim.optimizers import Optimizer, make_optimizer
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def init_train_state(model: Model, rng, opt: Optimizer) -> TrainState:
+    params = model.init(rng)
+    return TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+
+
+def abstract_train_state(model: Model, opt: Optimizer) -> TrainState:
+    params = model.abstract_params()
+    opt_state = jax.eval_shape(opt.init, params)
+    return TrainState(params, opt_state,
+                      jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def make_train_step(model: Model, train_cfg: TrainConfig, n_silos: int,
+                    exec_cfg: Optional[T.ExecConfig] = None,
+                    microbatches: int = 1):
+    """Builds train_step(state, batch, silo_weights) -> (state, metrics).
+
+    batch leaves have leading dim B = global batch; silo i owns the
+    contiguous block [i·B/n_silos, (i+1)·B/n_silos).  ``silo_weights`` is
+    (n_silos,) — the FLUDE round plan's per-silo aggregation weights.
+    """
+    exec_cfg = exec_cfg or T.ExecConfig()
+    opt = make_optimizer(train_cfg)
+    cfg = model.cfg
+
+    def weighted_loss(params, batch, silo_weights):
+        loss, metrics = model.loss(params, batch, exec_cfg,
+                                   per_example=True)
+        ce = metrics["ce_per_example"]                      # (B,)
+        B = ce.shape[0]
+        per_silo = B // n_silos
+        w = jnp.repeat(silo_weights, per_silo)              # (B,)
+        denom = jax.lax.stop_gradient(jnp.maximum(w.sum(), 1e-9))
+        wl = (ce * w).sum() / denom
+        aux = metrics.get("aux", 0.0)
+        return wl + (aux if isinstance(aux, float) else aux), ce.mean()
+
+    grad_fn = jax.value_and_grad(weighted_loss, has_aux=True)
+
+    def train_step(state: TrainState, batch, silo_weights):
+        if microbatches > 1:
+            def split(x):
+                """(B, ...) -> (mb, B/mb, ...) preserving silo-major order:
+                each microbatch holds per_silo/mb rows of EVERY silo."""
+                B = x.shape[0]
+                per_silo = B // n_silos
+                y = x.reshape((n_silos, microbatches,
+                               per_silo // microbatches) + x.shape[1:])
+                y = jnp.swapaxes(y, 0, 1)
+                return y.reshape((microbatches, B // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            adt = {"float32": jnp.float32,
+                   "bfloat16": jnp.bfloat16}[train_cfg.accum_dtype]
+
+            def acc_fn(carry, mbatch):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(state.params, mbatch, silo_weights)
+                g_acc = jax.tree.map(
+                    lambda a, b: (a + b.astype(adt)), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, adt), state.params)
+            (grads, loss), _ = jax.lax.scan(acc_fn, (g0, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+        else:
+            (loss, _), grads = grad_fn(state.params, batch, silo_weights)
+
+        new_params, new_opt = opt.step(state.params, grads,
+                                       state.opt_state)
+        # FLUDE empty-round gate: no received silos ⇒ model unchanged
+        any_received = silo_weights.sum() > 0
+        new_params = jax.tree.map(
+            lambda n, o: jnp.where(any_received, n, o),
+            new_params, state.params)
+        new_opt = jax.tree.map(
+            lambda n, o: jnp.where(any_received, n, o), new_opt,
+            state.opt_state)
+        metrics = {"loss": loss,
+                   "received_weight": silo_weights.sum()}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, exec_cfg: Optional[T.ExecConfig] = None):
+    exec_cfg = exec_cfg or T.ExecConfig()
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, exec_cfg)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, tokens, positions, cache):
+        return model.decode_step(params, tokens, positions, cache)
+
+    return decode_step

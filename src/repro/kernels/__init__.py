@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Each kernel package ships:
+  kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, GQA head mapping, interpret flag)
+  ref.py    — pure-jnp oracle used by the allclose sweep tests
+
+On this CPU container kernels are validated with interpret=True; model code
+defaults to the XLA path (kernel_impl="xla").
+"""

@@ -1,0 +1,30 @@
+"""Public jit'd wrapper: aggregate a whole pytree of stacked client updates."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fed_agg.kernel import fed_agg_pallas
+from repro.kernels.fed_agg.ref import fed_agg_ref
+
+
+def fed_agg(updates: jnp.ndarray, weights: jnp.ndarray, *,
+            impl: str = "pallas_interpret", block_c: int = 8,
+            block_d: int = 2048) -> jnp.ndarray:
+    """Σ_c w_c · u_c for one stacked tensor (C, ...)."""
+    C = updates.shape[0]
+    shape = updates.shape[1:]
+    if impl == "xla":
+        return fed_agg_ref(updates, weights)
+    flat = updates.reshape(C, -1)
+    out = fed_agg_pallas(flat, weights, block_c=block_c, block_d=block_d,
+                         interpret=(impl == "pallas_interpret"))
+    return out.reshape(shape).astype(updates.dtype)
+
+
+def fed_agg_tree(updates_tree: Any, weights: jnp.ndarray,
+                 **kw) -> Any:
+    """Aggregate every leaf of a stacked client-update pytree."""
+    return jax.tree.map(lambda u: fed_agg(u, weights, **kw), updates_tree)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for weighted federated aggregation."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fed_agg_ref(updates: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """out[d...] = Σ_c weights[c] · updates[c, d...]   (fp32 accumulate).
+
+    updates: (C, ...) stacked client tensors; weights: (C,).
+    """
+    C = updates.shape[0]
+    flat = updates.reshape(C, -1).astype(jnp.float32)
+    out = jnp.einsum("c,cd->d", weights.astype(jnp.float32), flat)
+    return out.reshape(updates.shape[1:]).astype(updates.dtype)

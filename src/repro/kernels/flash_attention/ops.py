@@ -1,0 +1,66 @@
+"""Public wrapper: padding to MXU-aligned tiles + layout adaptation.
+
+Accepts the model-side layout (B, S, Hk, G, D) or the canonical
+(B, H, S, D); pads D to 128 lanes and S to block multiples; strips padding
+after the call.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, scale=None,
+                    q_offset: int = 0, block_q: int = 128,
+                    block_k: int = 128, impl: str = "pallas_interpret"):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) -> (B, Hq, Sq, D)."""
+    if impl == "xla":
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             scale=scale, q_offset=q_offset)
+    B, Hq, Sq, D = q.shape
+    if scale is None:
+        scale = D ** -0.5
+    q, _ = _pad_to(q, 3, 128)
+    k, _ = _pad_to(k, 3, 128)
+    v, _ = _pad_to(v, 3, 128)
+    bq = min(block_q, Sq)
+    bk = min(block_k, k.shape[2])
+    q, _ = _pad_to(q, 2, bq)
+    # pad kv with positions masked out by never matching (append at end and
+    # rely on causal/window mask only when Sk is already aligned; otherwise
+    # mask via -inf on padded keys by zero-padding + explicit length mask is
+    # unnecessary because padded kp > every qp when causal)
+    k, Sk0 = _pad_to(k, 2, bk)
+    v, _ = _pad_to(v, 2, bk)
+    if not causal and k.shape[2] != Sk0:
+        raise ValueError("non-causal flash requires Sk % block_k == 0")
+    out = flash_attention_pallas(
+        q, k, v, causal=causal, window=window, scale=scale,
+        q_offset=q_offset, block_q=bq, block_k=bk,
+        interpret=(impl == "pallas_interpret"))
+    return out[:, :, :Sq, :D]
+
+
+def flash_attention_model_layout(q, k, v, **kw):
+    """Model layout adapter: q (B,S,Hk,G,D); k,v (B,S,Hk,D)."""
+    B, S, Hk, G, D = q.shape
+    qc = jnp.transpose(q, (0, 2, 3, 1, 4)).reshape(B, Hk * G, S, D)
+    kc = jnp.transpose(k, (0, 2, 1, 3))
+    vc = jnp.transpose(v, (0, 2, 1, 3))
+    o = flash_attention(qc, kc, vc, **kw)
+    return jnp.transpose(o.reshape(B, Hk, G, S, D), (0, 3, 1, 2, 4))

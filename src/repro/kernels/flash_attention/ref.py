@@ -1,0 +1,38 @@
+"""Pure-jnp oracle: dense softmax attention with causal/window masking."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  scale: Optional[float] = None,
+                  q_offset: int = 0) -> jnp.ndarray:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D); GQA via head grouping.
+
+    Returns (B, Hq, Sq, D) in q's dtype (fp32 softmax inside).
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    qg = q.reshape(B, Hkv, g, Sq, D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    qp = q_offset + jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, D).astype(q.dtype)

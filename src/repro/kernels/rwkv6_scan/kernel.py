@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: WKV6 recurrence, chunk-resident state.
+
+Grid (B, H, nc) — chunks innermost; the (D, D) per-head state lives in VMEM
+fp32 scratch across chunks.  Within a chunk the exact per-timestep
+recurrence runs in a fori_loop over VMEM-resident (c, D) tiles: each step is
+an outer product k_t⊗v_t (rank-1 MXU update) + a VPU decay multiply —
+this is the TPU-idiomatic shape for data-dependent per-channel decays that
+break the plain-matmul chunk form (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref,
+                y_ref, sf_ref, state_ref, *, chunk: int, n_chunks: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        state_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)      # (c, D)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = jnp.exp(lw_ref[0, 0].astype(jnp.float32))
+    u = u_ref[0].astype(jnp.float32)         # (D,)
+
+    def step(t, S):
+        kt = k[t]                            # (D,)
+        vt = v[t]
+        a = kt[:, None] * vt[None, :]        # (D, D) rank-1
+        y = jax.lax.dot_general(
+            (r[t] * u)[None, :], a, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[0] + jax.lax.dot_general(
+            r[t][None, :], S, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[0]
+        y_ref[0, 0, t] = y.astype(y_ref.dtype)
+        return w[t][:, None] * S + a
+
+    S = jax.lax.fori_loop(0, chunk, step, state_ref[...])
+    state_ref[...] = S
+
+    @pl.when(j == n_chunks - 1)
+    def _done():
+        sf_ref[0, 0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan_pallas(r, k, v, logw, u, s0, *, chunk: int = 64,
+                      interpret: bool = False):
+    """r,k,v,logw: (B,H,S,D); u: (H,D); s0: (B,H,D,D) fp32."""
+    B, H, S, D = r.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0))
+        r = jnp.pad(r, widths)
+        k = jnp.pad(k, widths)          # k=0 ⇒ no state contribution
+        v = jnp.pad(v, widths)
+        logw = jnp.pad(logw, widths)    # logw=0 ⇒ identity decay
+    Sp = S + pad
+    nc = Sp // c
+
+    kernel = functools.partial(_wkv_kernel, chunk=c, n_chunks=nc)
+    y, sf = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, c, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, c, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, c, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, c, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, D), lambda b, h, j: (h, 0)),
+            pl.BlockSpec((1, 1, D, D), lambda b, h, j: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, D, D), lambda b, h, j: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Sp, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, D, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u, s0)
+    return y[:, :, :S], sf

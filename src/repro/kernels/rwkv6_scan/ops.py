@@ -1,0 +1,37 @@
+"""Public wrapper for the WKV6 kernel: model layout (B, S, H, D) adapter.
+
+``wkv_kernel_adapter`` plugs directly into ``repro.models.rwkv.time_mix``'s
+``kernel=`` hook (same contract as ``wkv_recurrence``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_pallas
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+
+
+def rwkv6_scan(r, k, v, logw, u, s0: Optional[jnp.ndarray] = None, *,
+               chunk: int = 64, impl: str = "pallas_interpret"):
+    """Kernel layout (B,H,S,D) in/out."""
+    B, H, S, D = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, D, D), jnp.float32)
+    if impl == "xla":
+        return rwkv6_scan_ref(r, k, v, logw, u, s0)
+    return rwkv6_scan_pallas(r, k, v, logw, u, s0, chunk=chunk,
+                             interpret=(impl == "pallas_interpret"))
+
+
+def wkv_kernel_adapter(impl: str = "pallas_interpret", chunk: int = 64):
+    """Returns fn(r,k,v,logw,u,state) in model layout (B,S,H,D)."""
+    def fn(r, k, v, logw, u, state):
+        rk = jnp.moveaxis(r, 1, 2)
+        kk = jnp.moveaxis(k, 1, 2)
+        vk = jnp.moveaxis(v, 1, 2)
+        lw = jnp.moveaxis(logw, 1, 2)
+        y, sf = rwkv6_scan(rk, kk, vk, lw, u, state, chunk=chunk, impl=impl)
+        return jnp.moveaxis(y, 1, 2), sf
+    return fn

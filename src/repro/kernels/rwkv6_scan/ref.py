@@ -1,0 +1,32 @@
+"""Pure-jnp oracle: exact WKV6 recurrence (kernel layout (B, H, S, D))."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, logw, u, s0: Optional[jnp.ndarray] = None):
+    """r,k,v,logw: (B,H,S,D); u: (H,D); s0: (B,H,D,D) fp32.
+
+    y_t = r_t · (S_{t-1} + diag(u)·k_t v_tᵀ);  S_t = diag(w_t)·S_{t-1}
+                                                     + k_t v_tᵀ
+    Returns y (B,H,S,D) fp32 and the final state.
+    """
+    B, H, S, D = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, D, D), jnp.float32)
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    wf = jnp.exp(logw.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                       # (B,H,D)
+        a = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + uf[None, :, :, None] * a)
+        return wt[..., None] * S + a, y
+
+    xs = tuple(jnp.moveaxis(t, 2, 0) for t in (rf, kf, vf, wf))
+    SF, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 2), SF

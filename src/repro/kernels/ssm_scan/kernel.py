@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: chunked Mamba2 SSD scan.
+
+Grid (B, H, nc) — chunks innermost; the (P, N) state carries in VMEM fp32
+scratch across chunk iterations.  Intra-chunk work is three MXU matmuls
+((c,N)x(N,c), (c,c)x(c,P), (c,N)^T x (c,P)); the per-chunk decay vectors
+live in VREGs.  The wrapper pads S to chunk multiples with dt = 0 (identity
+decay, zero contribution).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref,
+                y_ref, hf_ref, state_ref, *, n_chunks: int, chunk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        state_ref[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, 0].astype(jnp.float32)           # (c, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)         # (c,)
+    A = a_ref[0]                                  # scalar (per head)
+    Bm = b_ref[0, 0].astype(jnp.float32)          # (c, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)          # (c, N)
+
+    a = dt * A                                    # (c,) log-decay, <= 0
+    seg = jnp.cumsum(a)                           # (c,)
+    state = state_ref[...]                        # (P, N)
+
+    # intra-chunk: M[i,l] = (C_i · B_l) exp(seg_i - seg_l) [l <= i]
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (c, c)
+    dseg = seg[:, None] - seg[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    ll = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    M = jnp.where(ll <= ii, cb * jnp.exp(dseg), 0.0)
+    xdt = x * dt[:, None]                         # (c, P)
+    y = jax.lax.dot_general(M, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # inter-chunk: y += exp(seg_i) * C_i · state
+    cs = jax.lax.dot_general(Cm, state, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (c, P)
+    y = y + jnp.exp(seg)[:, None] * cs
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # state update: state' = exp(seg_last)·state + Σ_l w_l · x_l ⊗ B_l
+    w = jnp.exp(seg[-1] - seg)                    # (c,)
+    dstate = jax.lax.dot_general(xdt, Bm * w[:, None],
+                                 (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    state_ref[...] = jnp.exp(seg[-1]) * state + dstate
+
+    @pl.when(j == n_chunks - 1)
+    def _done():
+        hf_ref[0, 0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan_pallas(x, dt, A, Bm, Cm, h0, *, chunk: int = 128,
+                    interpret: bool = False):
+    """x: (B,H,S,P); dt: (B,H,S); A: (H,); Bm,Cm: (B,H,S,N);
+    h0: (B,H,P,N) fp32.  Returns (y (B,H,S,P), h_final (B,H,P,N))."""
+    B, H, S, P = x.shape
+    N = Bm.shape[-1]
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, pad)))   # dt=0: no-op steps
+        Bm = jnp.pad(Bm, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // c
+
+    kernel = functools.partial(_ssd_kernel, n_chunks=nc, chunk=c)
+    y, hf = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, c, P), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, c), lambda b, h, j: (b, h, j)),
+            pl.BlockSpec((1,), lambda b, h, j: (h,)),
+            pl.BlockSpec((1, 1, c, N), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, c, N), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, j: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, P), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, j: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Sp, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), Bm, Cm, h0)
+    return y[:, :, :S], hf

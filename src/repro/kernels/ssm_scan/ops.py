@@ -1,0 +1,32 @@
+"""Public wrapper: model layout + group expansion for the SSD kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.kernel import ssm_scan_pallas
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+def ssm_scan(x, dt, A, Bm, Cm, h0: Optional[jnp.ndarray] = None, *,
+             chunk: int = 128, impl: str = "pallas_interpret"):
+    """Model layout: x (B,S,H,P); dt (B,S,H); A (H,); Bm/Cm (B,S,G,N).
+
+    Returns y (B,S,H,P) fp32 and final state (B,H,P,N) fp32.
+    """
+    B, S, H, P = x.shape
+    G = Bm.shape[2]
+    rep = H // G
+    xk = jnp.moveaxis(x, 1, 2)                     # (B,H,S,P)
+    dtk = jnp.moveaxis(dt, 1, 2)                   # (B,H,S)
+    Bk = jnp.repeat(jnp.moveaxis(Bm, 1, 2), rep, axis=1)
+    Ck = jnp.repeat(jnp.moveaxis(Cm, 1, 2), rep, axis=1)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, Bm.shape[-1]), jnp.float32)
+    if impl == "xla":
+        y, hf = ssm_scan_ref(xk, dtk, A, Bk, Ck, h0)
+    else:
+        y, hf = ssm_scan_pallas(xk, dtk, A, Bk, Ck, h0, chunk=chunk,
+                                interpret=(impl == "pallas_interpret"))
+    return jnp.moveaxis(y, 1, 2), hf

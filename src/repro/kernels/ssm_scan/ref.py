@@ -1,0 +1,39 @@
+"""Pure-jnp oracle: per-timestep Mamba2 SSD recurrence (exact, sequential).
+
+h_t = exp(dt_t · A_h) · h_{t-1} + dt_t · x_t ⊗ B_t ;   y_t = C_t · h_t
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(x, dt, A, Bm, Cm, h0: Optional[jnp.ndarray] = None):
+    """x: (B, H, S, P); dt: (B, H, S); A: (H,) negative;
+    Bm, Cm: (B, H, S, N) (groups pre-expanded to heads).
+    Returns y (B, H, S, P) fp32 and final state (B, H, P, N) fp32."""
+    B, H, S, P = x.shape
+    N = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                      # (B,H,P),(B,H),(B,H,N)
+        da = jnp.exp(dtt * Af[None, :])            # (B,H)
+        h = da[..., None, None] * h + jnp.einsum(
+            "bhp,bhn->bhpn", xt * dtt[..., None], bt)
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    xs = (jnp.moveaxis(xf, 2, 0), jnp.moveaxis(dtf, 2, 0),
+          jnp.moveaxis(Bf, 2, 0), jnp.moveaxis(Cf, 2, 0))
+    hF, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 2), hF

@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: the dry-run builds 512 placeholder host
+# devices so jax.make_mesh can realize the production meshes.  Smoke tests
+# and benchmarks never import this module and keep seeing 1 device.
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+For each combination this:
+  1. builds the model's abstract params / optimizer state / caches
+     (ShapeDtypeStruct stand-ins — nothing is allocated),
+  2. jits the FLUDE train step (train_4k), prefill step (prefill_32k) or
+     decode step (decode_32k / long_500k) with the production shardings,
+  3. ``.lower().compile()`` — a failure here is a sharding bug,
+  4. records memory_analysis / cost_analysis / roofline terms into
+     results/dryrun/<arch>__<shape>__<mesh>.json (resumable).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k \
+      --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--force]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.configs.base import TrainConfig
+from repro.fl import cross_silo
+from repro.launch.mesh import make_production_mesh, n_silos
+from repro.models import ExecConfig, build_model, input_specs, \
+    supports_shape
+from repro.models import layers as PL
+from repro.optim.optimizers import make_optimizer
+from repro.roofline.analysis import build_roofline, model_flops
+from repro.roofline.hlo import analyze_hlo_text
+from repro.sharding import partitioning as SP
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _exec_cfg(cfg, shape, mesh, rules, silos, overrides=None):
+    kw = dict(mesh=mesh, rules=rules, moe_groups=silos)
+    kw.update(overrides or {})
+    return ExecConfig(**kw)
+
+
+def _microbatches(cfg, shape, n_silo):
+    """Per-silo microbatching keeps live activations bounded (§Perf)."""
+    per_silo = max(shape.global_batch // n_silo, 1)
+    target = 4 if cfg.d_model <= 8192 else 1
+    if cfg.moe is not None and cfg.moe.num_experts >= 64:
+        target = 1          # (T', E, C') dispatch tensors scale with E
+    mb = max(per_silo // target, 1)
+    while shape.global_batch % (mb) != 0 or \
+            (shape.global_batch // mb) % 1 != 0:
+        mb -= 1
+    # microbatch count must divide the global batch
+    while shape.global_batch % mb != 0:
+        mb -= 1
+    return mb
+
+
+def lower_one(arch: str, shape_name: str, mesh_name: str,
+              exec_overrides=None, microbatches=None, save_hlo=False):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    model = build_model(cfg)
+    rules = SP.make_rules(cfg, mesh)
+    pspecs = SP.param_shardings(model.specs, mesh, rules)
+    silos = n_silos(mesh)
+    ecfg = _exec_cfg(cfg, shape, mesh, rules, silos, exec_overrides)
+
+    t0 = time.time()
+    # >=150B params: bf16 optimizer moments + grad accumulators, else fp32
+    # (hardware adaptation — fp32 Adam state for 405B alone exceeds a
+    # 256-chip v5e pod; see DESIGN.md §3 / EXPERIMENTS.md §Perf)
+    tc = TrainConfig()
+    if model.param_count() > 1.5e11:
+        tc = TrainConfig(moment_dtype="bfloat16", accum_dtype="bfloat16")
+    if shape.kind == "train":
+        opt = make_optimizer(tc)
+        state = cross_silo.abstract_train_state(model, opt)
+        # optimizer moments share the param shardings; scalars replicate
+        from repro.optim.optimizers import OptState
+        state_sh = cross_silo.TrainState(
+            params=pspecs,
+            opt_state=OptState(pspecs, pspecs, NamedSharding(mesh, P())),
+            step=NamedSharding(mesh, P()),
+        )
+        batch = input_specs(cfg, shape)
+        batch_sh = SP.batch_shardings(batch, mesh)
+        w = jax.ShapeDtypeStruct((silos,), jnp.float32)
+        w_sh = NamedSharding(mesh, P())
+        mb = microbatches if microbatches is not None else \
+            _microbatches(cfg, shape, silos)
+        step_fn = cross_silo.make_train_step(
+            model, tc, silos, ecfg, microbatches=mb)
+        jitted = jax.jit(step_fn,
+                         in_shardings=(state_sh, batch_sh, w_sh),
+                         donate_argnums=(0,))
+        args = (state, batch, w)
+    elif shape.kind == "prefill":
+        batch = input_specs(cfg, shape)
+        batch_sh = SP.batch_shardings(batch, mesh)
+        step_fn = cross_silo.make_prefill_step(model, ecfg)
+        # output cache must be sharded like the decode-input cache —
+        # otherwise XLA replicates the (L, B, S, Hkv, D) buffers
+        out_abs = jax.eval_shape(step_fn, model.abstract_params(), batch)
+        out_sh = (SP.batch_shardings(out_abs[0], mesh)
+                  if out_abs[0] is not None else None,
+                  SP.cache_shardings(out_abs[1], mesh))
+        jitted = jax.jit(step_fn, in_shardings=(pspecs, batch_sh),
+                         out_shardings=out_sh)
+        args = (model.abstract_params(), batch)
+    else:  # decode
+        inp = input_specs(cfg, shape)
+        cache = inp["cache"]
+        cache_sh = SP.cache_shardings(cache, mesh)
+        tok_sh = SP.batch_shardings(
+            {"tokens": inp["tokens"], "positions": inp["positions"]}, mesh)
+        step_fn = cross_silo.make_decode_step(model)
+        jitted = jax.jit(step_fn,
+                         in_shardings=(pspecs, tok_sh["tokens"],
+                                       tok_sh["positions"], cache_sh),
+                         donate_argnums=(3,))
+        args = (model.abstract_params(), inp["tokens"], inp["positions"],
+                cache)
+
+    with mesh:
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    try:
+        ca = compiled.cost_analysis() or {}
+    except Exception:
+        ca = {}
+    hlo_text = compiled.as_text()
+    cost = analyze_hlo_text(hlo_text)
+
+    n_active = model.active_param_count()
+    mflops = model_flops(cfg, shape, n_active, shape.kind)
+    roof = build_roofline(arch, shape_name, mesh_name, "", mesh.size,
+                          mflops, cost=cost)
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "n_devices": mesh.size,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_gb": mem.argument_size_in_bytes / 2**30,
+            "output_gb": mem.output_size_in_bytes / 2**30,
+            "temp_gb": mem.temp_size_in_bytes / 2**30,
+            "peak_gb": (mem.argument_size_in_bytes
+                        + mem.temp_size_in_bytes) / 2**30,
+        },
+        "xla_cost_analysis": {k: ca.get(k) for k in
+                              ("flops", "bytes accessed")},
+        "roofline": roof.to_dict(),
+        "microbatches": microbatches,
+        "params_total": model.param_count(),
+        "params_active": n_active,
+        "hlo_bytes": len(hlo_text),
+    }
+    if save_hlo:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        with open(os.path.join(
+                RESULTS_DIR, f"{arch}__{shape_name}__{mesh_name}.hlo.txt"),
+                "w") as f:
+            f.write(hlo_text)
+    return rec
+
+
+def result_path(arch, shape, mesh_name):
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh_name}.json")
+
+
+def run_matrix(archs, shapes, meshes, force=False, save_hlo=False,
+               exec_overrides=None):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    results = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            shape = INPUT_SHAPES[shape_name]
+            if not supports_shape(cfg, shape):
+                rec = {"arch": arch, "shape": shape_name, "mesh": "-",
+                       "skipped": "needs sub-quadratic attention "
+                                  "(see DESIGN.md §5)"}
+                print(f"SKIP  {arch} × {shape_name}: full attention")
+                path = result_path(arch, shape_name, "skip")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                continue
+            for mesh_name in meshes:
+                path = result_path(arch, shape_name, mesh_name)
+                if os.path.exists(path) and not force:
+                    print(f"HAVE  {arch} × {shape_name} × {mesh_name}")
+                    continue
+                print(f"RUN   {arch} × {shape_name} × {mesh_name} ...",
+                      flush=True)
+                try:
+                    rec = lower_one(arch, shape_name, mesh_name,
+                                    exec_overrides=exec_overrides,
+                                    save_hlo=save_hlo)
+                    r = rec["roofline"]
+                    print(f"  ok: compile {rec['compile_s']}s, "
+                          f"peak {rec['memory']['peak_gb']:.1f} GB/dev, "
+                          f"dominant={r['dominant']} "
+                          f"(c={r['compute_s']:.3g}s m={r['memory_s']:.3g}s "
+                          f"coll={r['collective_s']:.3g}s)", flush=True)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "error": str(e)[:2000],
+                           "traceback": traceback.format_exc()[-4000:]}
+                    print(f"  FAIL: {e}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                results.append(rec)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    run_matrix(archs, shapes, meshes, force=args.force,
+               save_hlo=args.save_hlo)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production mesh builders (TPU v5e pods).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state; callers (dryrun / train / serve) decide when the
+mesh is built.  Dry-runs must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import — ``repro.launch.dryrun`` does this in its first two lines.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips; two pods: (2, 16, 16) = 512."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(min(model, n // data), 1)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def n_silos(mesh) -> int:
+    """FL silos = product of the (pod, data) axes."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("pod", 1) * sizes.get("data", 1)

@@ -1,0 +1,2 @@
+from repro.models.model import Model, build_model, input_specs, supports_shape
+from repro.models.transformer import ExecConfig

@@ -1,0 +1,222 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend is a stub).
+
+``input_specs()`` provides precomputed frame embeddings (B, S_frames, d) —
+the mel-spectrogram + 2×conv1d feature extractor carve-out.  The encoder uses
+fixed sinusoidal positions (as whisper does); the decoder uses learned
+positional embeddings over ``max_target_len``.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as A
+from repro.models import layers as L
+
+
+class EncDecCache(NamedTuple):
+    self_kv: Any        # stacked per-decoder-layer KVCache (self attention)
+    cross_k: jax.Array  # (Ldec, B, S_enc, Hkv, D)
+    cross_v: jax.Array
+    length: jax.Array
+
+
+def _enc_block_spec(cfg, layered):
+    return {
+        "norm1": L.norm_spec(cfg, cfg.d_model, layered=layered),
+        "attn": A.gqa_spec(cfg, layered=layered),
+        "norm2": L.norm_spec(cfg, cfg.d_model, layered=layered),
+        "mlp": L.mlp_spec(cfg, cfg.d_model, cfg.d_ff, layered=layered),
+    }
+
+
+def _dec_block_spec(cfg, layered):
+    return {
+        "norm1": L.norm_spec(cfg, cfg.d_model, layered=layered),
+        "self_attn": A.gqa_spec(cfg, layered=layered),
+        "norm_x": L.norm_spec(cfg, cfg.d_model, layered=layered),
+        "cross_attn": A.gqa_spec(cfg, layered=layered),
+        "norm2": L.norm_spec(cfg, cfg.d_model, layered=layered),
+        "mlp": L.mlp_spec(cfg, cfg.d_model, cfg.d_ff, layered=layered),
+    }
+
+
+def build_encdec_spec(cfg):
+    e = cfg.encdec
+    dt = L.cfg_dtype(cfg.param_dtype)
+    return {
+        "embed": L.ParamSpec((cfg.vocab_size, cfg.d_model), dt,
+                             ("vocab", "embed"), "embed", 0.02),
+        "dec_pos": L.ParamSpec((e.max_target_len, cfg.d_model), dt,
+                               (None, "embed"), "embed", 0.02),
+        "enc_blocks": _enc_block_spec(cfg, e.num_encoder_layers),
+        "enc_norm": L.norm_spec(cfg, cfg.d_model),
+        "dec_blocks": _dec_block_spec(cfg, e.num_decoder_layers),
+        "final_norm": L.norm_spec(cfg, cfg.d_model),
+    }
+
+
+def _sinusoid(S, d):
+    pos = np.arange(S)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    inv = 1.0 / (10000 ** (dim / max(d // 2 - 1, 1)))
+    ang = pos * inv
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], -1),
+                       jnp.float32)
+
+
+def encode(params, frames, cfg, exec_cfg):
+    """frames: (B, S_enc, d) stub conv features -> encoder hidden states."""
+    B, S, _ = frames.shape
+    x = frames.astype(L.cfg_dtype(cfg.compute_dtype))
+    x = x + _sinusoid(S, cfg.d_model).astype(x.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body_fn(x, p_l):
+        h = L.apply_norm(p_l["norm1"], x, cfg)
+        x = x + A.gqa_forward(p_l["attn"], h, positions, cfg, causal=False,
+                              q_chunk=exec_cfg.q_chunk,
+                              k_chunk=exec_cfg.k_chunk,
+                              impl=exec_cfg.attn_impl)
+        h = L.apply_norm(p_l["norm2"], x, cfg)
+        return x + L.apply_mlp(p_l["mlp"], h, cfg), None
+
+    body = jax.remat(body_fn) if cfg.remat else body_fn
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.apply_norm(params["enc_norm"], x, cfg)
+
+
+def _cross_kv(p, enc_out, cfg):
+    dt = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(dt))
+    return k, v
+
+
+def _cross_attend(p, x, k, v, cfg, exec_cfg):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhgk->bshgk", x, p["wq"].astype(dt))
+    scale = cfg.resolved_head_dim ** -0.5
+    o = A.chunked_attention(q, k, v, causal=False, window=None, scale=scale,
+                            q_chunk=exec_cfg.q_chunk,
+                            k_chunk=exec_cfg.k_chunk) \
+        if exec_cfg.attn_impl == "chunked" else \
+        A.dense_attention(q, k, v, causal=False, window=None, scale=scale)
+    return jnp.einsum("bshgk,hgkd->bsd", o, p["wo"].astype(dt))
+
+
+def decode_train(params, enc_out, dec_tokens, cfg, exec_cfg):
+    """Teacher-forced decoder pass -> logits (B, S_dec, V)."""
+    B, Sd = dec_tokens.shape
+    x = jnp.take(params["embed"], dec_tokens, axis=0).astype(enc_out.dtype)
+    x = x + params["dec_pos"][:Sd].astype(x.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(Sd)[None], (B, Sd))
+
+    def body_fn(x, p_l):
+        h = L.apply_norm(p_l["norm1"], x, cfg)
+        x = x + A.gqa_forward(p_l["self_attn"], h, positions, cfg,
+                              causal=True, q_chunk=min(exec_cfg.q_chunk, Sd),
+                              k_chunk=min(exec_cfg.k_chunk, Sd),
+                              impl=exec_cfg.attn_impl)
+        h = L.apply_norm(p_l["norm_x"], x, cfg)
+        k, v = _cross_kv(p_l["cross_attn"], enc_out, cfg)
+        x = x + _cross_attend(p_l["cross_attn"], h, k, v, cfg, exec_cfg)
+        h = L.apply_norm(p_l["norm2"], x, cfg)
+        return x + L.apply_mlp(p_l["mlp"], h, cfg), None
+
+    body = jax.remat(body_fn) if cfg.remat else body_fn
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return x @ params["embed"].astype(x.dtype).T
+
+
+def encdec_loss(params, batch, cfg, exec_cfg, per_example=False):
+    enc_out = encode(params, batch["frames"], cfg, exec_cfg)
+    logits = decode_train(params, enc_out, batch["dec_tokens"], cfg,
+                          exec_cfg)
+    labels = batch["dec_labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(lp, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    if per_example:
+        tok = jnp.maximum(mask.sum(-1), 1.0)
+        ce = -(ll * mask).sum(-1) / tok
+        return ce.mean(), {"ce_per_example": ce}
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = -(ll * mask).sum() / denom
+    return ce, {"ce": ce}
+
+
+def init_encdec_cache(cfg, batch: int, enc_len: int, filled: bool = False):
+    e = cfg.encdec
+    dt = L.cfg_dtype(cfg.param_dtype)
+    hd = cfg.resolved_head_dim
+    Ld = e.num_decoder_layers
+    kv = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[A.KVCache(
+            jnp.zeros((batch, e.max_target_len, cfg.num_kv_heads, hd), dt),
+            jnp.zeros((batch, e.max_target_len, cfg.num_kv_heads, hd), dt),
+            jnp.zeros((batch,), jnp.int32))
+          for _ in range(Ld)])
+    cross = jnp.zeros((Ld, batch, enc_len, cfg.num_kv_heads, hd), dt)
+    length = jnp.full((batch,), enc_len if filled else 0, jnp.int32)
+    return EncDecCache(kv, cross, cross, length)
+
+
+def encdec_prefill(params, batch, cfg, exec_cfg):
+    """Encode audio + precompute cross K/V; decoder cache starts empty."""
+    enc_out = encode(params, batch["frames"], cfg, exec_cfg)
+
+    def per_layer(carry, p_l):
+        k, v = _cross_kv(p_l["cross_attn"], enc_out, cfg)
+        return carry, (k, v)
+
+    _, (ck, cv) = jax.lax.scan(per_layer, None, params["dec_blocks"])
+    B, S_enc = enc_out.shape[0], enc_out.shape[1]
+    cache = init_encdec_cache(cfg, B, S_enc)
+    return EncDecCache(cache.self_kv, ck, cv,
+                       jnp.full((B,), S_enc, jnp.int32))
+
+
+def encdec_decode_step(params, tokens, positions, cache: EncDecCache, cfg):
+    """One decoder token against cached cross K/V.  tokens: (B, 1)."""
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(
+        L.cfg_dtype(cfg.compute_dtype))
+    pos_emb = jnp.take(params["dec_pos"], positions[:, 0], axis=0)
+    x = x + pos_emb[:, None, :].astype(x.dtype)
+
+    def body(x, inputs):
+        p_l, kv_l, ck_l, cv_l = inputs
+        h = L.apply_norm(p_l["norm1"], x, cfg)
+        o, kv_l = A.gqa_decode_step(p_l["self_attn"], h, positions, cfg,
+                                    kv_l)
+        x = x + o
+        h = L.apply_norm(p_l["norm_x"], x, cfg)
+        x = x + _cross_attend_cached(p_l["cross_attn"], h, ck_l, cv_l, cfg)
+        h = L.apply_norm(p_l["norm2"], x, cfg)
+        return x + L.apply_mlp(p_l["mlp"], h, cfg), kv_l
+
+    x, new_kv = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache.self_kv,
+                  cache.cross_k, cache.cross_v))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = x @ params["embed"].astype(x.dtype).T
+    return logits, cache._replace(self_kv=new_kv)
+
+
+def _cross_attend_cached(p, x, k, v, cfg):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhgk->bshgk", x, p["wq"].astype(dt))
+    scale = cfg.resolved_head_dim ** -0.5
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q * scale, k.astype(dt),
+                   preferred_element_type=jnp.float32)
+    prob = jax.nn.softmax(s, axis=-1).astype(dt)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", prob, v.astype(dt))
+    o = jnp.transpose(o, (0, 3, 1, 2, 4))
+    return jnp.einsum("bshgk,hgkd->bsd", o, p["wo"].astype(dt))

@@ -1,0 +1,164 @@
+"""Unified model API + per-(arch, shape) input specs for the dry-run.
+
+``Model`` wraps spec building, init, loss, prefill and decode for every
+assigned architecture.  ``input_specs(cfg, shape)`` returns
+ShapeDtypeStruct stand-ins for every input of the step that the dry-run
+lowers (train / prefill / decode) — weak-type-correct, shardable, and never
+allocating device memory.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import encdec as E
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+class Model:
+    """Functional model handle: specs + pure apply functions."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        if cfg.encdec is not None:
+            self.specs = E.build_encdec_spec(cfg)
+        else:
+            self.specs = T.build_spec(cfg)
+
+    # -- params ------------------------------------------------------------
+    def init(self, rng) -> Dict[str, Any]:
+        return L.init_params(self.specs, rng)
+
+    def abstract_params(self):
+        return L.abstract_params(self.specs)
+
+    def param_axes(self):
+        return L.param_axes(self.specs)
+
+    def param_count(self) -> int:
+        import numpy as np
+        leaves = jax.tree.leaves(L.abstract_params(self.specs))
+        return int(sum(np.prod(l.shape) for l in leaves))
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: shared + top_k experts only)."""
+        cfg = self.cfg
+        if cfg.moe is None:
+            return self.param_count()
+        import numpy as np
+        total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                L.abstract_params(self.specs))[0]:
+            n = int(np.prod(leaf.shape))
+            keys = [getattr(k, "key", str(k)) for k in path]
+            if any(k in ("wi", "wg", "wo") for k in keys) and \
+                    any(k == "moe" for k in keys) and \
+                    not any(k == "shared" for k in keys):
+                n = n * cfg.moe.top_k // cfg.moe.num_experts
+            total += n
+        return total
+
+    # -- steps ---------------------------------------------------------------
+    def loss(self, params, batch, exec_cfg=T.ExecConfig(),
+             per_example: bool = False):
+        if self.cfg.encdec is not None:
+            return E.encdec_loss(params, batch, self.cfg, exec_cfg,
+                                 per_example=per_example)
+        return T.lm_loss(params, batch, self.cfg, exec_cfg,
+                         per_example=per_example)
+
+    def logits(self, params, batch, exec_cfg=T.ExecConfig()):
+        if self.cfg.encdec is not None:
+            enc = E.encode(params, batch["frames"], self.cfg, exec_cfg)
+            return E.decode_train(params, enc, batch["dec_tokens"],
+                                  self.cfg, exec_cfg)
+        return T.forward(params, batch, self.cfg, exec_cfg)[0]
+
+    def prefill(self, params, batch, exec_cfg=T.ExecConfig(),
+                max_len=None):
+        if self.cfg.encdec is not None:
+            return None, E.encdec_prefill(params, batch, self.cfg, exec_cfg)
+        return T.prefill(params, batch, self.cfg, exec_cfg,
+                         max_len=max_len)
+
+    def decode_step(self, params, tokens, positions, cache):
+        if self.cfg.encdec is not None:
+            return E.encdec_decode_step(params, tokens, positions, cache,
+                                        self.cfg)
+        return T.decode_step(params, tokens, positions, cache, self.cfg)
+
+    def init_cache(self, batch: int, max_len: int, filled: bool = False):
+        if self.cfg.encdec is not None:
+            return E.init_encdec_cache(self.cfg, batch, max_len, filled)
+        return T.init_cache(self.cfg, batch, max_len, filled)
+
+    def abstract_cache(self, batch: int, max_len: int):
+        return jax.eval_shape(
+            lambda: self.init_cache(batch, max_len, filled=True))
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs
+# ---------------------------------------------------------------------------
+
+def supports_shape(cfg: ModelConfig, shape: InputShape) -> bool:
+    """long_500k needs sub-quadratic context (SSM / hybrid / SWA)."""
+    if shape.name != "long_500k":
+        return True
+    if cfg.arch_type in ("ssm", "hybrid"):
+        return True
+    return cfg.sliding_window is not None
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                n_silos: int = 1) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of the lowered step."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def tok(b, s):
+        return jax.ShapeDtypeStruct((b, s), i32)
+
+    if shape.kind == "train":
+        if cfg.encdec is not None:
+            e = cfg.encdec
+            return {
+                "frames": jax.ShapeDtypeStruct(
+                    (B, S, cfg.d_model), L.cfg_dtype(cfg.compute_dtype)),
+                "dec_tokens": tok(B, e.max_target_len),
+                "dec_labels": tok(B, e.max_target_len),
+            }
+        batch = {"tokens": tok(B, S), "labels": tok(B, S)}
+        if cfg.vision is not None:
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.vision.num_image_tokens, cfg.vision.patch_embed_dim),
+                L.cfg_dtype(cfg.compute_dtype))
+        return batch
+
+    if shape.kind == "prefill":
+        if cfg.encdec is not None:
+            return {"frames": jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), L.cfg_dtype(cfg.compute_dtype))}
+        batch = {"tokens": tok(B, S)}
+        if cfg.vision is not None:
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.vision.num_image_tokens, cfg.vision.patch_embed_dim),
+                L.cfg_dtype(cfg.compute_dtype))
+        return batch
+
+    # decode: one new token against a filled cache of length S
+    model = Model(cfg)
+    cache = model.abstract_cache(B, S)
+    return {
+        "tokens": tok(B, 1),
+        "positions": jax.ShapeDtypeStruct((B, 1), i32),
+        "cache": cache,
+    }

@@ -1,0 +1,228 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-parallel + decode step.
+
+Used by zamba2 (hybrid).  The chunked form computes intra-chunk contributions
+with MXU-friendly masked matmuls and carries the (H, P, N) SSM state across
+chunks with a lax.scan — the same decomposition the Pallas kernel
+(repro.kernels.ssm_scan) implements with explicit VMEM tiles.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array    # (B, K-1, conv_channels) rolling conv input window
+    ssm: jax.Array     # (B, H, P, N) state
+    length: jax.Array  # (B,)
+
+
+def ssm_spec(cfg, layered: Optional[int] = None):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    H = d_inner // s.head_dim
+    G = s.n_groups
+    conv_ch = d_inner + 2 * G * s.d_state
+    dt = L.cfg_dtype(cfg.param_dtype)
+
+    def w(shape, axes, init="normal", scale=1.0):
+        if layered is not None:
+            shape = (layered,) + shape
+            axes = ("layers",) + axes
+        return L.ParamSpec(shape, dt, axes, init, scale)
+
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "w_in": w((d, d_inner + conv_ch + H), ("embed", "ssm_in")),
+        "conv_w": w((s.conv_kernel, conv_ch), ("conv", "ssm_conv"),
+                    scale=1.0),
+        "conv_b": w((conv_ch,), ("ssm_conv",), "zeros"),
+        "a_log": w((H,), ("heads",), "zeros"),   # A = -exp(a_log)
+        "d_skip": w((H,), ("heads",), "ones"),
+        "dt_bias": w((H,), ("heads",), "zeros"),
+        "norm": w((d_inner,), ("ssm_inner",), "ones"),
+        "w_out": w((d_inner, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(p, x, cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    G, N = s.n_groups, s.d_state
+    H = d_inner // s.head_dim
+    zxbcdt = x @ p["w_in"].astype(x.dtype)
+    z, xconv, dt_raw = jnp.split(
+        zxbcdt, [d_inner, d_inner + d_inner + 2 * G * N], axis=-1)
+    return z, xconv, dt_raw, (d_inner, G, N, H)
+
+
+def _causal_conv(xconv, p, cfg):
+    """Depthwise causal conv1d via K shifted adds (K=4: cheap, fusable)."""
+    K = cfg.ssm.conv_kernel
+    w = p["conv_w"].astype(xconv.dtype)
+    out = jnp.zeros_like(xconv)
+    for i in range(K):
+        shift = K - 1 - i
+        shifted = jnp.pad(xconv, ((0, 0), (shift, 0), (0, 0)))[
+            :, :xconv.shape[1]]
+        out = out + shifted * w[i]
+    return jax.nn.silu(out + p["conv_b"].astype(xconv.dtype))
+
+
+def _ssd_chunked(xh, dtv, A, Bm, Cm, h0=None, chunk=256):
+    """Chunked SSD scan.
+
+    xh:  (B, S, H, P)  input heads
+    dtv: (B, S, H)     positive step sizes
+    A:   (H,)          negative decay rates
+    Bm:  (B, S, G, N)  input matrices (groups broadcast over heads)
+    Cm:  (B, S, G, N)  output matrices
+    h0:  optional initial state (B, H, P, N)
+    Returns y (B, S, H, P) and final state (B, H, P, N).
+    """
+    B, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        # dt = 0 on padded steps: identity decay, zero contribution
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtv = jnp.pad(dtv, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S_out = S
+    S = S + pad
+    nc = S // chunk
+
+    xc = xh.reshape(B, nc, chunk, H, P)
+    dtc = dtv.reshape(B, nc, chunk, H).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, chunk, G, N)
+    Cc = Cm.reshape(B, nc, chunk, G, N)
+    a = dtc * A.astype(jnp.float32)                     # (B,nc,c,H) negative
+    seg = jnp.cumsum(a, axis=2)                         # within-chunk cumsum
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def body(h, inputs):
+        xk, dtk, Bk, Ck, ak, segk = inputs              # chunk k slices
+        # expand groups over heads
+        Bh = jnp.repeat(Bk, rep, axis=2)                # (B,c,H,N)
+        Ch = jnp.repeat(Ck, rep, axis=2)
+        # intra-chunk: M[i,j] = (C_i . B_j) exp(seg_i - seg_j) [j <= i]
+        cb = jnp.einsum("bihn,bjhn->bhij", Ch.astype(jnp.float32),
+                        Bh.astype(jnp.float32))
+        dseg = segk[:, :, None, :] - segk[:, None, :, :]  # (B,i,j,H)
+        dseg = jnp.transpose(dseg, (0, 3, 1, 2))          # (B,H,i,j)
+        mask = jnp.tril(jnp.ones((segk.shape[1], segk.shape[1]), bool))
+        M = jnp.where(mask, cb * jnp.exp(dseg), 0.0)
+        xdt = xk.astype(jnp.float32) * dtk[..., None]     # (B,c,H,P)
+        y_intra = jnp.einsum("bhij,bjhp->bihp", M, xdt)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bihn,bhpn,bih->bihp", Ch.astype(jnp.float32),
+                             h, jnp.exp(segk))
+        # state update: h' = exp(seg_last) h + sum_j exp(seg_last - seg_j)
+        #                                          dt_j x_j B_j^T
+        seg_last = segk[:, -1:, :]                        # (B,1,H)
+        w = jnp.exp(seg_last - segk)                      # (B,c,H)
+        dh = jnp.einsum("bjhp,bjhn,bjh->bhpn", xdt, Bh.astype(jnp.float32),
+                        w)
+        h_new = jnp.exp(seg_last[:, 0, :])[:, :, None, None] * h + dh
+        return h_new, (y_intra + y_inter)
+
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+          jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0),
+          jnp.moveaxis(a, 1, 0), jnp.moveaxis(seg, 1, 0))
+    hF, ys = jax.lax.scan(body, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)[:, :S_out]
+    return y.astype(xh.dtype), hF
+
+
+def ssm_forward(p, x, cfg, state: Optional[SSMState] = None,
+                return_state: bool = False):
+    """Full-sequence Mamba2 block.  x: (B, S, d)."""
+    s = cfg.ssm
+    z, xconv, dt_raw, (d_inner, G, N, H) = _split_proj(p, x, cfg)
+    xconv = _causal_conv(xconv, p, cfg)
+    xh, Bm, Cm = jnp.split(xconv, [d_inner, d_inner + G * N], axis=-1)
+    B_, S_ = x.shape[0], x.shape[1]
+    xh = xh.reshape(B_, S_, H, s.head_dim)
+    Bm = Bm.reshape(B_, S_, G, N)
+    Cm = Cm.reshape(B_, S_, G, N)
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    h0 = state.ssm if state is not None else None
+    y, hF = _ssd_chunked(xh, dtv, A, Bm, Cm, h0=h0, chunk=s.chunk_size)
+    y = y + xh * p["d_skip"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(B_, S_, d_inner)
+    y = _gated_norm(y, z, p)
+    out = y @ p["w_out"].astype(x.dtype)
+    if return_state:
+        K = s.conv_kernel
+        # raw (pre-activation) conv-input tail becomes the rolling window
+        _, xconv_raw, _, _ = _split_proj(p, x, cfg)
+        conv_state = xconv_raw[:, -(K - 1):, :]
+        st = SSMState(conv_state.astype(x.dtype), hF,
+                      jnp.full((B_,), S_, jnp.int32))
+        return out, st
+    return out
+
+
+def _gated_norm(y, z, p, eps=1e-5):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    yf = yf * jax.lax.rsqrt((yf ** 2).mean(-1, keepdims=True) + eps)
+    return (yf * p["norm"].astype(jnp.float32)).astype(y.dtype)
+
+
+def ssm_decode_step(p, x, cfg, state: SSMState):
+    """One-token decode.  x: (B, 1, d)."""
+    s = cfg.ssm
+    z, xconv_new, dt_raw, (d_inner, G, N, H) = _split_proj(p, x, cfg)
+    K = s.conv_kernel
+    # conv over the rolling window [state.conv, xconv_new]
+    win = jnp.concatenate([state.conv, xconv_new], axis=1)    # (B, K, C)
+    w = p["conv_w"].astype(win.dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", win[:, -K:], w) \
+        + p["conv_b"].astype(win.dtype)
+    conv_out = jax.nn.silu(conv_out)[:, None, :]              # (B,1,C)
+    xh, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + G * N], axis=-1)
+    B_ = x.shape[0]
+    xh = xh.reshape(B_, H, s.head_dim)
+    Bm = Bm.reshape(B_, G, N)
+    Cm = Cm.reshape(B_, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    dtv = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dtv * A)                                      # (B,H)
+    xdt = xh.astype(jnp.float32) * dtv[..., None]              # (B,H,P)
+    h_new = (da[..., None, None] * state.ssm
+             + jnp.einsum("bhp,bhn->bhpn", xdt, Bh.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, Ch.astype(jnp.float32))
+    y = y.astype(x.dtype) + xh * p["d_skip"].astype(xh.dtype)[None, :, None]
+    y = y.reshape(B_, 1, d_inner)
+    y = _gated_norm(y, z, p)
+    out = y @ p["w_out"].astype(x.dtype)
+    new_conv = jnp.concatenate([state.conv, xconv_new], axis=1)[:, 1:]
+    return out, SSMState(new_conv, h_new, state.length + 1)
+
+
+def init_ssm_state(cfg, batch: int):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    dt = L.cfg_dtype(cfg.param_dtype)
+    return SSMState(
+        jnp.zeros((batch, s.conv_kernel - 1, conv_ch), dt),
+        jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+        jnp.zeros((batch,), jnp.int32))

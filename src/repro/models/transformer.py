@@ -1,0 +1,487 @@
+"""Unified causal-LM stacks: dense / MoE / hybrid (zamba2) / RWKV / VLM.
+
+All stacks are scan-over-layers with optional remat; decode carries stacked
+per-layer caches through the same scan.  Whisper (enc-dec) lives in
+``repro.models.encdec``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rwkv as R
+from repro.models import ssm as S
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecConfig:
+    """Runtime execution knobs (closure-captured; not a jit arg)."""
+    attn_impl: str = "chunked"       # chunked | dense
+    q_chunk: int = 512
+    k_chunk: int = 512
+    unroll_causal: bool = False      # causal block pruning (bigger HLO)
+    scan_layers: Optional[bool] = None   # override cfg.scan_layers
+    remat: Optional[bool] = None
+    seq_shard_resid: bool = False    # Megatron-SP: shard residual seq dim
+                                     # over "model" (saves remat residuals)
+    moe_groups: int = 1              # GShard dispatch groups (= n_silos)
+    moe_dispatch: str = "gather"     # gather | einsum (reference)
+    # activation sharding: mesh + logical rules (None = no constraints)
+    mesh: Any = None
+    rules: Any = None
+
+
+from repro.models.layers import shard_act  # noqa: E402
+
+
+def _scan_layers(cfg, exec_cfg):
+    v = exec_cfg.scan_layers
+    return cfg.scan_layers if v is None else v
+
+
+def _remat(cfg, exec_cfg):
+    v = exec_cfg.remat
+    return cfg.remat if v is None else v
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+def _block_spec(cfg, layered):
+    """One decoder block (attention or MLA) + (MLP or MoE)."""
+    p = {"norm1": _lnorm(cfg, layered), "norm2": _lnorm(cfg, layered)}
+    if cfg.attention == "mla":
+        p["attn"] = A.mla_spec(cfg, layered=layered)
+    else:
+        p["attn"] = A.gqa_spec(cfg, layered=layered)
+    if cfg.moe is not None:
+        p["moe"] = M.moe_spec(cfg, layered=layered)
+    else:
+        p["mlp"] = L.mlp_spec(cfg, cfg.d_model, cfg.d_ff, layered=layered)
+    return p
+
+
+def _lnorm(cfg, layered):
+    return L.norm_spec(cfg, cfg.d_model, layered=layered)
+
+
+def build_spec(cfg) -> Dict[str, Any]:
+    dt = L.cfg_dtype(cfg.param_dtype)
+    spec: Dict[str, Any] = {
+        "embed": L.ParamSpec((cfg.vocab_size, cfg.d_model), dt,
+                             ("vocab", "embed"), "embed", 0.02),
+        "final_norm": L.norm_spec(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = L.ParamSpec((cfg.d_model, cfg.vocab_size), dt,
+                                      ("embed", "vocab"), "normal")
+    Lr = cfg.num_layers if cfg.scan_layers else None
+
+    if cfg.arch_type == "hybrid":
+        spec["mamba_norm"] = L.norm_spec(cfg, cfg.d_model,
+                                         layered=cfg.num_layers)
+        spec["mamba"] = S.ssm_spec(cfg, layered=cfg.num_layers)
+        spec["shared_attn"] = {
+            "norm1": _lnorm(cfg, None),
+            "attn": A.gqa_spec(cfg, layered=None),
+            "norm2": _lnorm(cfg, None),
+            "mlp": L.mlp_spec(cfg, cfg.d_model, cfg.d_ff),
+        }
+    elif cfg.rwkv is not None:
+        spec["blocks"] = {
+            "norm1": _lnorm(cfg, Lr), "norm2": _lnorm(cfg, Lr),
+            "rwkv": R.rwkv_spec(cfg, layered=Lr),
+        }
+        spec["ln0"] = L.norm_spec(cfg, cfg.d_model)   # rwkv pre-embedding LN
+    else:
+        spec["blocks"] = _block_spec(cfg, Lr)
+    if cfg.vision is not None:
+        spec["vis_proj"] = L.dense_spec(
+            cfg, cfg.vision.patch_embed_dim, cfg.d_model,
+            ("vis_patch", "embed"))
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, tokens, cfg, batch=None):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(
+        L.cfg_dtype(cfg.compute_dtype))
+    if cfg.vision is not None and batch is not None \
+            and "image_embeds" in batch:
+        n = cfg.vision.num_image_tokens
+        img = L.apply_dense(params["vis_proj"],
+                            batch["image_embeds"].astype(x.dtype))
+        x = jnp.concatenate([img, x[:, n:]], axis=1)
+    return x
+
+
+def lm_head(params, x, cfg):
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(x.dtype).T
+    else:
+        w = params["lm_head"].astype(x.dtype)
+    return x @ w
+
+
+# ---------------------------------------------------------------------------
+# Dense / MoE blocks
+# ---------------------------------------------------------------------------
+
+def _attn_fwd(p, x, positions, cfg, exec_cfg):
+    kw = dict(q_chunk=exec_cfg.q_chunk, k_chunk=exec_cfg.k_chunk,
+              unroll_causal=exec_cfg.unroll_causal, impl=exec_cfg.attn_impl)
+    if cfg.attention == "mla":
+        return A.mla_forward(p, x, positions, cfg, **kw)
+    return A.gqa_forward(p, x, positions, cfg, ecfg=exec_cfg, **kw)
+
+
+def _resid_axes(exec_cfg):
+    return ("batch", "seq_sp" if exec_cfg.seq_shard_resid else None, None)
+
+
+def block_forward(p, x, positions, cfg, exec_cfg):
+    """Returns (x, aux)."""
+    h = L.apply_norm(p["norm1"], x, cfg)
+    x = x + _attn_fwd(p["attn"], h, positions, cfg, exec_cfg)
+    x = shard_act(x, _resid_axes(exec_cfg), exec_cfg)
+    h = L.apply_norm(p["norm2"], x, cfg)
+    if cfg.moe is not None:
+        y, aux = M.moe_forward(p["moe"], h, cfg, exec_cfg)
+    else:
+        y, aux = L.apply_mlp(p["mlp"], h, cfg), 0.0
+    return shard_act(x + y, _resid_axes(exec_cfg), exec_cfg), aux
+
+
+def block_decode(p, x, positions, cfg, cache):
+    h = L.apply_norm(p["norm1"], x, cfg)
+    if cfg.attention == "mla":
+        o, cache = A.mla_decode_step(p["attn"], h, positions, cfg, cache)
+    else:
+        o, cache = A.gqa_decode_step(p["attn"], h, positions, cfg, cache)
+    x = x + o
+    h = L.apply_norm(p["norm2"], x, cfg)
+    if cfg.moe is not None:
+        y, _ = M.moe_forward(p["moe"], h, cfg)
+    else:
+        y = L.apply_mlp(p["mlp"], h, cfg)
+    return x + y, cache
+
+
+def block_prefill(p, x, positions, cfg, cache, exec_cfg):
+    h = L.apply_norm(p["norm1"], x, cfg)
+    kw = dict(q_chunk=exec_cfg.q_chunk, k_chunk=exec_cfg.k_chunk)
+    if cfg.attention == "mla":
+        o, cache = A.mla_prefill(p["attn"], h, positions, cfg, cache, **kw)
+    else:
+        o, cache = A.gqa_prefill(p["attn"], h, positions, cfg, cache,
+                                 ecfg=exec_cfg, **kw)
+    x = x + o
+    h = L.apply_norm(p["norm2"], x, cfg)
+    if cfg.moe is not None:
+        y, _ = M.moe_forward(p["moe"], h, cfg)
+    else:
+        y = L.apply_mlp(p["mlp"], h, cfg)
+    return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# Stacks (train forward)
+# ---------------------------------------------------------------------------
+
+def _hybrid_segments(cfg):
+    """zamba2 layer plan: shared attn before layers 0, k, 2k, ..."""
+    k = cfg.hybrid.attn_every
+    bounds = list(range(0, cfg.num_layers, k)) + [cfg.num_layers]
+    return [(bounds[i], bounds[i + 1]) for i in range(len(bounds) - 1)]
+
+
+def _shared_attn_block(p, x, positions, cfg, exec_cfg):
+    h = L.apply_norm(p["norm1"], x, cfg)
+    x = x + A.gqa_forward(
+        p["attn"], h, positions, cfg,
+        q_chunk=exec_cfg.q_chunk, k_chunk=exec_cfg.k_chunk,
+        unroll_causal=exec_cfg.unroll_causal, impl=exec_cfg.attn_impl)
+    h = L.apply_norm(p["norm2"], x, cfg)
+    return x + L.apply_mlp(p["mlp"], h, cfg)
+
+
+def forward(params, batch, cfg, exec_cfg=ExecConfig()):
+    """Full train/eval forward -> (logits, aux_loss)."""
+    tokens = batch["tokens"]
+    B, Sq = tokens.shape
+    positions = batch.get("positions",
+                          jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq)))
+    x = embed_tokens(params, tokens, cfg, batch)
+    x = shard_act(x, _resid_axes(exec_cfg), exec_cfg)
+
+    if cfg.arch_type == "hybrid":
+        x = _hybrid_forward(params, x, positions, cfg, exec_cfg)
+        aux = 0.0
+    elif cfg.rwkv is not None:
+        x = _rwkv_forward(params, x, cfg, exec_cfg)
+        aux = 0.0
+    else:
+        x, aux = _dense_forward(params, x, positions, cfg, exec_cfg)
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = lm_head(params, x, cfg)
+    return shard_act(logits, ("batch", None, "vocab"), exec_cfg), aux
+
+
+def _dense_forward(params, x, positions, cfg, exec_cfg):
+    def body_fn(carry, p_l):
+        x, aux = carry
+        x, a = block_forward(p_l, x, positions, cfg, exec_cfg)
+        return (x, aux + a), None
+
+    body = jax.remat(body_fn) if _remat(cfg, exec_cfg) else body_fn
+    if _scan_layers(cfg, exec_cfg):
+        (x, aux), _ = jax.lax.scan(body, (x, 0.0), params["blocks"])
+    else:
+        aux = 0.0
+        for i in range(cfg.num_layers):
+            p_l = jax.tree.map(lambda a: a[i], params["blocks"])
+            (x, aux), _ = body((x, aux), p_l)
+    return x, aux
+
+
+def _hybrid_forward(params, x, positions, cfg, exec_cfg):
+    segs = _hybrid_segments(cfg)
+
+    def mamba_body_fn(x, inputs):
+        norm_p, mamba_p = inputs
+        h = L.apply_norm(norm_p, x, cfg)
+        return x + S.ssm_forward(mamba_p, h, cfg), None
+
+    body = (jax.remat(mamba_body_fn) if _remat(cfg, exec_cfg)
+            else mamba_body_fn)
+    for (lo, hi) in segs:
+        x = _shared_attn_block(params["shared_attn"], x, positions, cfg,
+                               exec_cfg)
+        seg_norm = jax.tree.map(lambda a: a[lo:hi], params["mamba_norm"])
+        seg_mamba = jax.tree.map(lambda a: a[lo:hi], params["mamba"])
+        x, _ = jax.lax.scan(body, x, (seg_norm, seg_mamba))
+    return x
+
+
+def _rwkv_forward(params, x, cfg, exec_cfg):
+    x = L.apply_norm(params["ln0"], x, cfg)
+
+    def body_fn(x, p_l):
+        return R.rwkv_block(p_l["rwkv"], x, cfg, p_l["norm1"],
+                            p_l["norm2"]), None
+
+    body = jax.remat(body_fn) if _remat(cfg, exec_cfg) else body_fn
+    if _scan_layers(cfg, exec_cfg):
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    else:
+        for i in range(cfg.num_layers):
+            p_l = jax.tree.map(lambda a: a[i], params["blocks"])
+            x, _ = body(x, p_l)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(params, batch, cfg, exec_cfg=ExecConfig(),
+            per_example: bool = False):
+    """Next-token CE.  labels < 0 are masked.  Returns (loss, metrics)."""
+    logits, aux = forward(params, batch, cfg, exec_cfg)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    # label pick via fused iota-compare (gather on a model-sharded vocab
+    # axis would force an all-gather of the logits)
+    pick = (jax.lax.broadcasted_iota(jnp.int32, lp.shape, lp.ndim - 1)
+            == jnp.maximum(labels, 0)[..., None])
+    ll = jnp.sum(jnp.where(pick, lp, 0.0), axis=-1)
+    if per_example:
+        tok = jnp.maximum(mask.sum(-1), 1.0)
+        ce = -(ll * mask).sum(-1) / tok                  # (B,)
+        loss = ce.mean() + aux
+        return loss, {"ce_per_example": ce, "aux": aux}
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = -(ll * mask).sum() / denom
+    return ce + aux, {"ce": ce, "aux": aux,
+                      "acc": ((logits.argmax(-1) == labels) * mask).sum()
+                      / denom}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve) paths
+# ---------------------------------------------------------------------------
+
+class DecodeCache(NamedTuple):
+    layers: Any            # stacked per-layer cache pytree
+    extra: Any             # hybrid: stacked shared-attn caches; else None
+
+
+def init_cache(cfg, batch: int, max_len: int, filled: bool = False):
+    if cfg.arch_type == "hybrid":
+        n_app = len(_hybrid_segments(cfg))
+        attn = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[A.init_kv_cache(cfg, batch, max_len, filled)
+              for _ in range(n_app)])
+        ssm = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[S.init_ssm_state(cfg, batch)
+                             for _ in range(cfg.num_layers)])
+        if filled:
+            ssm = ssm._replace(
+                length=jnp.full_like(ssm.length, max_len))
+        return DecodeCache(ssm, attn)
+    if cfg.rwkv is not None:
+        st = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[R.init_rwkv_state(cfg, batch)
+                            for _ in range(cfg.num_layers)])
+        if filled:
+            st = st._replace(length=jnp.full_like(st.length, max_len))
+        return DecodeCache(st, None)
+    mk = (A.init_mla_cache if cfg.attention == "mla" else A.init_kv_cache)
+    kv = jax.tree.map(lambda *xs: jnp.stack(xs),
+                      *[mk(cfg, batch, max_len, filled)
+                        for _ in range(cfg.num_layers)])
+    return DecodeCache(kv, None)
+
+
+def decode_step(params, tokens, positions, cache: DecodeCache, cfg):
+    """One-token decode.  tokens: (B, 1); positions: (B, 1) absolute."""
+    x = embed_tokens(params, tokens, cfg)
+
+    if cfg.arch_type == "hybrid":
+        segs = _hybrid_segments(cfg)
+        new_attn = []
+        ssm_st = cache.layers
+
+        def mamba_body(x, inputs):
+            norm_p, mamba_p, st = inputs
+            h = L.apply_norm(norm_p, x, cfg)
+            o, st = S.ssm_decode_step(mamba_p, h, cfg, st)
+            return x + o, st
+
+        for si, (lo, hi) in enumerate(segs):
+            attn_c = jax.tree.map(lambda a: a[si], cache.extra)
+            h = L.apply_norm(params["shared_attn"]["norm1"], x, cfg)
+            o, attn_c = A.gqa_decode_step(params["shared_attn"]["attn"], h,
+                                          positions, cfg, attn_c)
+            x = x + o
+            h = L.apply_norm(params["shared_attn"]["norm2"], x, cfg)
+            x = x + L.apply_mlp(params["shared_attn"]["mlp"], h, cfg)
+            new_attn.append(attn_c)
+            seg = lambda t: jax.tree.map(lambda a: a[lo:hi], t)
+            x, st_seg = jax.lax.scan(
+                mamba_body, x, (seg(params["mamba_norm"]),
+                                seg(params["mamba"]), seg(ssm_st)))
+            ssm_st = jax.tree.map(
+                lambda full, part: jax.lax.dynamic_update_slice_in_dim(
+                    full, part.astype(full.dtype), lo, 0), ssm_st, st_seg)
+        attn_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *new_attn)
+        x = L.apply_norm(params["final_norm"], x, cfg)
+        return lm_head(params, x, cfg), DecodeCache(ssm_st, attn_stack)
+
+    if cfg.rwkv is not None:
+        x = L.apply_norm(params["ln0"], x, cfg)
+
+        def body(x, inputs):
+            p_l, st = inputs
+            h = L.apply_norm(p_l["norm1"], x, cfg)
+            tm, wkv = R.time_mix(p_l["rwkv"], h, cfg, st)
+            x = x + tm
+            h2 = L.apply_norm(p_l["norm2"], x, cfg)
+            x = x + R.channel_mix(p_l["rwkv"], h2, st)
+            new_st = R.RWKVState(h[:, -1], h2[:, -1], wkv, st.length + 1)
+            return x, new_st
+
+        x, new_states = jax.lax.scan(body, x, (params["blocks"],
+                                               cache.layers))
+        x = L.apply_norm(params["final_norm"], x, cfg)
+        return lm_head(params, x, cfg), DecodeCache(new_states, None)
+
+    def body(x, inputs):
+        p_l, c_l = inputs
+        x, c_l = block_decode(p_l, x, positions, cfg, c_l)
+        return x, c_l
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache.layers))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return lm_head(params, x, cfg), DecodeCache(new_cache, None)
+
+
+def prefill(params, batch, cfg, exec_cfg=ExecConfig(), max_len=None):
+    """Prompt prefill: returns (last-position logits, filled cache).
+
+    ``max_len`` sets the cache capacity (>= prompt length) so subsequent
+    decode steps have headroom; defaults to the prompt length (the dry-run
+    decode shapes supply their own filled caches).
+    """
+    tokens = batch["tokens"]
+    B, Sq = tokens.shape
+    max_len = max_len or Sq
+    positions = batch.get("positions",
+                          jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq)))
+    x = embed_tokens(params, tokens, cfg, batch)
+
+    if cfg.arch_type == "hybrid":
+        segs = _hybrid_segments(cfg)
+        attn_caches, ssm_states = [], []
+
+        def mamba_body(x, inputs):
+            norm_p, mamba_p = inputs
+            h = L.apply_norm(norm_p, x, cfg)
+            o, st = S.ssm_forward(mamba_p, h, cfg, return_state=True)
+            return x + o, st
+
+        for si, (lo, hi) in enumerate(segs):
+            c0 = A.init_kv_cache(cfg, B, max_len)
+            h = L.apply_norm(params["shared_attn"]["norm1"], x, cfg)
+            o, c = A.gqa_prefill(params["shared_attn"]["attn"], h,
+                                 positions, cfg, c0, ecfg=exec_cfg,
+                                 q_chunk=exec_cfg.q_chunk,
+                                 k_chunk=exec_cfg.k_chunk)
+            x = x + o
+            h = L.apply_norm(params["shared_attn"]["norm2"], x, cfg)
+            x = x + L.apply_mlp(params["shared_attn"]["mlp"], h, cfg)
+            attn_caches.append(c)
+            seg = lambda t: jax.tree.map(lambda a: a[lo:hi], t)
+            x, st_seg = jax.lax.scan(
+                mamba_body, x, (seg(params["mamba_norm"]),
+                                seg(params["mamba"])))
+            ssm_states.append(st_seg)
+        ssm = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *ssm_states)
+        attn = jax.tree.map(lambda *xs: jnp.stack(xs), *attn_caches)
+        x = L.apply_norm(params["final_norm"], x, cfg)
+        return lm_head(params, x[:, -1:], cfg), DecodeCache(ssm, attn)
+
+    if cfg.rwkv is not None:
+        x = L.apply_norm(params["ln0"], x, cfg)
+
+        def body(x, p_l):
+            x, st = R.rwkv_block(p_l["rwkv"], x, cfg, p_l["norm1"],
+                                 p_l["norm2"], return_state=True)
+            return x, st
+
+        x, states = jax.lax.scan(body, x, params["blocks"])
+        x = L.apply_norm(params["final_norm"], x, cfg)
+        return lm_head(params, x[:, -1:], cfg), DecodeCache(states, None)
+
+    def body(x, inputs):
+        p_l, c_l = inputs
+        x, c_l = block_prefill(p_l, x, positions, cfg, c_l, exec_cfg)
+        return x, c_l
+
+    cache0 = init_cache(cfg, B, max_len).layers
+    x, cache = jax.lax.scan(body, x, (params["blocks"], cache0))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return lm_head(params, x[:, -1:], cfg), DecodeCache(cache, None)

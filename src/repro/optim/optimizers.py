@@ -1,0 +1,125 @@
+"""Pytree optimizers (no external deps): SGD, momentum, Adam(W) + schedules.
+
+Moments are kept in fp32 regardless of param dtype; updates are computed in
+fp32 and cast back.  API mirrors optax minimally:
+
+    opt = make_optimizer(train_cfg)
+    state = opt.init(params)
+    params, state = opt.step(params, grads, state, step)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class OptState(NamedTuple):
+    mu: Any            # first moment (or momentum buffer); None-like zeros
+    nu: Any            # second moment (adam only)
+    count: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    step: Callable[..., Any]
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  floor_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        wu = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = floor_frac + (1 - floor_frac) * 0.5 * (1 +
+                                                     jnp.cos(jnp.pi * prog))
+        return base_lr * wu * cos
+    return lr
+
+
+def make_optimizer(cfg: TrainConfig,
+                   lr_fn: Optional[Callable] = None) -> Optimizer:
+    if lr_fn is None:
+        lr_fn = warmup_cosine(cfg.learning_rate, cfg.warmup_steps,
+                              cfg.total_steps)
+    kind = cfg.optimizer
+
+    mdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
+        cfg.moment_dtype]
+
+    def f32_zeros(params):
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, mdt), params)
+
+    def init(params):
+        if kind in ("adam", "adamw"):
+            return OptState(f32_zeros(params), f32_zeros(params),
+                            jnp.zeros((), jnp.int32))
+        if kind == "momentum":
+            return OptState(f32_zeros(params), None,
+                            jnp.zeros((), jnp.int32))
+        return OptState(None, None, jnp.zeros((), jnp.int32))
+
+    def step(params, grads, state: OptState, *, lr_scale=1.0):
+        count = state.count + 1
+        lr = lr_fn(count) * lr_scale
+        if cfg.grad_clip:
+            grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        if kind in ("adam", "adamw"):
+            b1, b2, eps = cfg.beta1, cfg.beta2, 1e-8
+            mu = jax.tree.map(
+                lambda m, g: (b1 * m.astype(jnp.float32)
+                              + (1 - b1) * g).astype(mdt), state.mu, g32)
+            nu = jax.tree.map(
+                lambda v, g: (b2 * v.astype(jnp.float32)
+                              + (1 - b2) * g * g).astype(mdt),
+                state.nu, g32)
+            c = count.astype(jnp.float32)
+            bc1 = 1 - b1 ** c
+            bc2 = 1 - b2 ** c
+
+            def upd(p, m, v):
+                m = m.astype(jnp.float32)
+                v = v.astype(jnp.float32)
+                u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                if kind == "adamw" and p.ndim >= 2:
+                    u = u + cfg.weight_decay * p.astype(jnp.float32)
+                return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+            new_params = jax.tree.map(upd, params, mu, nu)
+            return new_params, OptState(mu, nu, count)
+
+        if kind == "momentum":
+            mu = jax.tree.map(lambda m, g: 0.9 * m + g, state.mu, g32)
+            new_params = jax.tree.map(
+                lambda p, m: (p.astype(jnp.float32) - lr * m
+                              ).astype(p.dtype), params, mu)
+            return new_params, OptState(mu, None, count)
+
+        # plain sgd
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g).astype(p.dtype),
+            params, g32)
+        return new_params, OptState(None, None, count)
+
+    return Optimizer(init=init, step=step)

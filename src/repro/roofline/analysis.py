@@ -1,0 +1,126 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_wire_bytes / (chips × links × link_bw)
+
+HLO_FLOPs / HLO_bytes / collective bytes come from the post-SPMD per-device
+module via ``repro.roofline.hlo`` (trip-count aware), so the three terms are
+already per-device; "chips ×" in the denominators is absorbed.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16/chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.roofline.hlo import HloCost, analyze_hlo_text
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (count links ~= 1 effective)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_wire_bytes: float
+    collective_breakdown: Dict[str, float]
+    model_flops_total: float          # 6·N·D (dense) / 6·N_active·D (MoE)
+    n_devices: int
+    notes: list
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_wire_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs (across devices): catches remat and
+        masked-block waste.  >1 is impossible; ≪1 means redundant compute."""
+        total = self.flops_per_device * self.n_devices
+        return self.model_flops_total / total if total else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "collective_wire_bytes": self.collective_wire_bytes,
+            "collective_breakdown": self.collective_breakdown,
+            "model_flops_total": self.model_flops_total,
+            "n_devices": self.n_devices,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "notes": self.notes,
+        }
+
+
+def model_flops(cfg, shape, n_params_active: int, kind: str) -> float:
+    """Reference useful FLOPs: 6·N·tokens for a train step, 2·N·tokens for
+    prefill, 2·N·batch for one decode step."""
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params_active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_params_active * tokens
+    return 2.0 * n_params_active * shape.global_batch   # decode: 1 token
+
+
+def build_roofline(arch: str, shape_name: str, mesh_name: str,
+                   hlo_text: str, n_devices: int,
+                   model_flops_total: float,
+                   cost: Optional[HloCost] = None) -> Roofline:
+    if cost is None:
+        cost = analyze_hlo_text(hlo_text)
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name,
+        flops_per_device=cost.flops,
+        bytes_per_device=cost.bytes,
+        collective_bytes_per_device=cost.total_collective_bytes,
+        collective_wire_bytes=cost.collective_wire_bytes,
+        collective_breakdown=dict(cost.collective_bytes),
+        model_flops_total=model_flops_total,
+        n_devices=n_devices,
+        notes=list(cost.notes),
+    )
+
+
+def format_table(rows) -> str:
+    """Markdown table for EXPERIMENTS.md §Roofline."""
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s "
+           "| dominant | useful-FLOP frac |\n"
+           "|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.4g} | {r['memory_s']:.4g} "
+            f"| {r['collective_s']:.4g} | **{r['dominant']}** "
+            f"| {r['useful_flops_fraction']:.3f} |")
+    return "\n".join(lines)

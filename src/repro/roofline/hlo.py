@@ -1,0 +1,385 @@
+"""HLO-text analyzer: FLOPs / HBM traffic / collective bytes with while-loop
+trip-count multiplication.
+
+Why not ``compiled.cost_analysis()``?  XLA's cost analysis does NOT multiply
+while-loop bodies by their trip count, so any scan-over-layers model is
+undercounted by ~num_layers× (verified: a 126-layer train step reported
+77 TFLOP instead of ~2.4 EFLOP).  This walker parses the *post-SPMD*
+optimized HLO (per-device shapes), recovers trip counts from while
+conditions, and aggregates:
+
+  * flops: dot ops exactly (2·prod(out)·prod(contracting)), elementwise 1/elem
+  * bytes: per materializing op — operands + outputs (fusion internals are
+    in-register and not counted)
+  * collective bytes: per op type, with wire-byte estimates from replica
+    group sizes
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_SIMPLE_TYPE_RE = re.compile(r"^([a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s+")
+_OPCODE_RE = re.compile(r"^\s*([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+
+
+def _parse_instr_line(line: str):
+    """-> (name, type_str, opcode, rest) or None.
+
+    Handles tuple types containing nested parens/braces and /*index=N*/
+    comments (large while carries), which defeat a single regex.
+    """
+    m = _ASSIGN_RE.match(line)
+    if not m:
+        return None
+    name, tail = m.groups()
+    if tail.startswith("("):            # tuple type: scan matching paren
+        depth = 0
+        end = -1
+        for idx, ch in enumerate(tail):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = idx
+                    break
+        if end < 0:
+            return None
+        type_str, remainder = tail[:end + 1], tail[end + 1:]
+    else:
+        mt = _SIMPLE_TYPE_RE.match(tail)
+        if not mt:
+            return None
+        type_str = mt.group(1)
+        remainder = tail[mt.end():]
+    mo = _OPCODE_RE.match(remainder)
+    if not mo:
+        return None
+    return name, type_str, mo.group(1), mo.group(2)
+
+_ELEMWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "rsqrt", "sqrt", "power", "atan2", "and", "or", "xor", "not",
+    "select", "compare", "floor", "ceil", "round-nearest-afz", "sign",
+    "cosine", "sine", "clamp", "remainder", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "erf", "logistic",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _parse_shape(s: str) -> Tuple[int, int]:
+    """-> (num_elements, bytes); tuples are summed."""
+    total_el, total_by = 0, 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = int(np.prod([int(d) for d in dims.split(",")]))
+        total_el += n
+        total_by += n * _DTYPE_BYTES[dt]
+    return total_el, total_by
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str              # operands + attrs (raw tail of the line)
+
+    @property
+    def out_elems(self):
+        return _parse_shape(self.type_str)[0]
+
+    @property
+    def out_bytes(self):
+        return _parse_shape(self.type_str)[1]
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    table: Dict[str, str] = field(default_factory=dict)  # name -> type_str
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_wire_bytes: float = 0.0
+    notes: List[str] = field(default_factory=list)
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) \
+                + v * mult
+        self.collective_wire_bytes += other.collective_wire_bytes * mult
+
+    @property
+    def total_collective_bytes(self):
+        return sum(self.collective_bytes.values())
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_marker = None
+    for line in text.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            if line.lstrip().startswith("ENTRY"):
+                entry_marker = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        parsed = _parse_instr_line(line)
+        if parsed:
+            name, tstr, opcode, rest = parsed
+            cur.instrs.append(Instr(name, tstr, opcode, rest))
+            cur.table[name] = tstr
+    if entry_marker:
+        comps["__entry__"] = comps[entry_marker]
+    return comps
+
+
+def _called(rest: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", rest)
+    return m.group(1) if m else None
+
+
+def _group_size(rest: str, default: int = 1) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", rest)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _trip_count(while_rest: str,
+                cond: Optional[Computation]) -> Tuple[int, bool]:
+    """Trip count: XLA's known_trip_count annotation, else condition
+    heuristic (constant vs induction-var compare)."""
+    m = re.search(r'known_trip_count[^0-9]*"?n"?[^0-9]*(\d+)', while_rest)
+    if m:
+        return max(int(m.group(1)), 1), True
+    if cond is None:
+        return 1, False
+    consts = {}
+    for ins in cond.instrs:
+        if ins.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", "constant(" + ins.rest)
+            if m:
+                consts[ins.name] = int(m.group(1))
+    for ins in cond.instrs:
+        if ins.opcode in ("compare", "fusion"):
+            mdir = re.search(r"direction=(\w+)", ins.rest)
+            ops = re.findall(r"%([\w.\-]+)", ins.rest.split(")")[0])
+            cvals = [consts[o] for o in ops if o in consts]
+            if ins.opcode == "fusion" and cvals and not mdir:
+                mdir = re.match(r"(?s).*direction=LT.*", ins.rest) and \
+                    re.match(r"(LT)", "LT")
+            if mdir and cvals:
+                d = mdir.group(1) if hasattr(mdir, "group") else "LT"
+                c = max(cvals)
+                if d == "LT":
+                    return max(c, 1), True
+                if d == "LE":
+                    return max(c + 1, 1), True
+                return max(c, 1), False
+    return 1, False
+
+
+_MATERIALIZING_SKIP = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota",
+}
+
+
+def analyze_computation(comp: Computation, comps: Dict[str, Computation],
+                        cache: Dict[str, HloCost]) -> HloCost:
+    if comp.name in cache:
+        return cache[comp.name]
+    cost = HloCost()
+    cache[comp.name] = cost        # breaks cycles defensively
+    for ins in comp.instrs:
+        op = ins.opcode
+        if op == "while":
+            body = _called(ins.rest, "body")
+            cond = _called(ins.rest, "condition")
+            trip, ok = _trip_count(ins.rest, comps.get(cond))
+            if not ok:
+                cost.notes.append(f"while {ins.name}: trip count guessed=1")
+            if body in comps:
+                cost.add(analyze_computation(comps[body], comps, cache),
+                         trip)
+            cost.bytes += ins.out_bytes   # loop state traffic once
+        elif op == "fusion":
+            called = _called(ins.rest, "calls")
+            if called in comps:
+                sub = analyze_computation(comps[called], comps, cache)
+                cost.flops += sub.flops            # in-register compute
+                cost.collective_wire_bytes += sub.collective_wire_bytes
+                for k, v in sub.collective_bytes.items():
+                    cost.collective_bytes[k] = \
+                        cost.collective_bytes.get(k, 0.0) + v
+            cost.bytes += _fusion_traffic(ins, comp)
+        elif op == "conditional":
+            branches = re.findall(r"%([\w.\-]+)", ins.rest)
+            sub = [analyze_computation(comps[b], comps, cache)
+                   for b in branches if b in comps]
+            if sub:
+                best = max(sub, key=lambda c: c.flops)
+                cost.add(best)
+            cost.bytes += ins.out_bytes
+        elif op == "call":
+            called = _called(ins.rest, "to_apply")
+            if called in comps:
+                cost.add(analyze_computation(comps[called], comps, cache))
+        elif op == "dot":
+            flops = _dot_flops(ins, comp)
+            cost.flops += flops
+            cost.bytes += ins.out_bytes + _operand_bytes(ins, comp)
+        elif op == "convolution":
+            cost.flops += 2 * ins.out_elems   # unused in this codebase
+            cost.bytes += ins.out_bytes + _operand_bytes(ins, comp)
+        elif any(op.startswith(c) for c in _COLLECTIVES):
+            if op.endswith("-done"):
+                continue
+            base = next(c for c in _COLLECTIVES if op.startswith(c))
+            obytes = _operand_bytes(ins, comp)
+            if obytes == 0:
+                obytes = ins.out_bytes
+            n = _group_size(ins.rest, 2)
+            if base == "all-reduce":
+                wire = 2.0 * obytes * (n - 1) / max(n, 1)
+            elif base == "all-gather":
+                wire = float(max(ins.out_bytes, obytes)) * (n - 1) / max(n,
+                                                                         1)
+            elif base == "reduce-scatter":
+                wire = obytes * (n - 1) / max(n, 1)
+            elif base == "all-to-all":
+                wire = obytes * (n - 1) / max(n, 1)
+            else:                       # collective-permute
+                wire = float(obytes)
+            cost.collective_bytes[base] = \
+                cost.collective_bytes.get(base, 0.0) + obytes
+            cost.collective_wire_bytes += wire
+            cost.bytes += ins.out_bytes + obytes
+        elif op == "reduce":
+            cost.flops += _operand_elems(ins, comp)
+            cost.bytes += ins.out_bytes + _operand_bytes(ins, comp)
+        elif op in _ELEMWISE:
+            cost.flops += ins.out_elems
+            cost.bytes += ins.out_bytes + _operand_bytes(ins, comp)
+        elif op == "dynamic-slice":
+            # reads only the slice (+indices), not the whole operand
+            cost.bytes += 2.0 * ins.out_bytes
+        elif op == "dynamic-update-slice":
+            # in-place: traffic = update read + slice write
+            cost.bytes += 2.0 * _small_operand_bytes(ins, comp)
+        elif op in _MATERIALIZING_SKIP:
+            continue
+        else:
+            # copy, transpose, reshape, slice, pad, etc.
+            cost.bytes += ins.out_bytes + _operand_bytes(ins, comp)
+    cache[comp.name] = cost
+    return cost
+
+
+def _fusion_traffic(ins: Instr, comp: Computation) -> float:
+    """HBM traffic of a fusion: operands + output, with slice-pattern
+    corrections.  A fusion whose root is a dynamic-update-slice is an
+    in-place accumulator write (scan outputs): it touches only the update
+    slice, so the full accumulator operand must not be charged.  A fusion
+    built around dynamic-slice reads only the slice."""
+    name = ins.name
+    if "dynamic-update-slice" in name:
+        return 2.0 * _small_operand_bytes(ins, comp)
+    if "dynamic-slice" in name:
+        return 2.0 * ins.out_bytes + _small_operand_bytes(ins, comp)
+    return ins.out_bytes + _operand_bytes(ins, comp)
+
+
+def _small_operand_bytes(ins: Instr, comp: Computation) -> float:
+    """Sum of operand sizes excluding the single largest operand (the
+    in-place/accumulator buffer)."""
+    sizes = [_parse_shape(comp.table.get(n, ""))[1]
+             for n in _operand_names(ins)]
+    if not sizes:
+        return float(ins.out_bytes)
+    sizes.sort()
+    return float(sum(sizes[:-1])) if len(sizes) > 1 else float(sizes[0])
+
+
+def _operand_names(ins: Instr) -> List[str]:
+    head = ins.rest.split("), ")[0]
+    return re.findall(r"%([\w.\-]+)", head)
+
+
+def _operand_bytes(ins: Instr, comp: Computation) -> float:
+    return float(sum(_parse_shape(comp.table.get(n, ""))[1]
+                     for n in _operand_names(ins)))
+
+
+def _operand_elems(ins: Instr, comp: Computation) -> float:
+    return float(sum(_parse_shape(comp.table.get(n, ""))[0]
+                     for n in _operand_names(ins)))
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    ops = _operand_names(ins)
+    if not ops:
+        return 0.0
+    lhs_type = comp.table.get(ops[0], "")
+    m = _SHAPE_RE.search(lhs_type)
+    if not m:
+        return 0.0
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    contracting = 1
+    if mc and mc.group(1):
+        for d in mc.group(1).split(","):
+            if int(d) < len(dims):
+                contracting *= dims[int(d)]
+    return 2.0 * ins.out_elems * contracting
+
+
+def analyze_hlo_text(text: str) -> HloCost:
+    comps = parse_hlo(text)
+    if "__entry__" not in comps:
+        raise ValueError("no ENTRY computation found")
+    cache: Dict[str, HloCost] = {}
+    cost = analyze_computation(comps["__entry__"], comps, cache)
+    # collect trip-count warnings from all walked computations
+    notes = []
+    for c in cache.values():
+        notes.extend(c.notes)
+    cost.notes = sorted(set(notes))[:20]
+    return cost

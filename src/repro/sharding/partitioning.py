@@ -1,0 +1,177 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style).
+
+Baseline layout:
+  * FSDP: the ``embed`` axis of every weight shards over the data axes
+    (``("pod","data")`` on the multi-pod mesh) — optimizer state and params
+    are fully sharded.
+  * TP: ``mlp`` / ``vocab`` / one attention axis shard over ``model``.
+  * Attention TP axis is picked per-arch by divisibility:
+    kv_heads → q_group → heads → head_dim (first divisible by the model-axis
+    size wins; the roofline notes any arch forced onto head_dim).
+  * MoE: ``expert`` shards over ``model`` when divisible (deepseek-v2 160e),
+    otherwise ``expert_mlp`` shards (mixtral 8e).
+
+Activations: batch shards over (pod, data); logits over model.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import layers as L
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _attn_tp_axis(cfg, model_size: int, fallback: str = "replicate"):
+    """Attention TP axis: first head-ish axis divisible by the model-axis
+    size.  When nothing divides (qwen2: 28H/4kv; whisper: 20H), the choice
+    is between (a) sharding head_dim — contraction sharding that psums
+    every (Bq, Bk) score block (measured: collective-dominated, 135 s wire
+    on qwen2 train_4k), and (b) replicating attention over the model axis —
+    redundant attention compute but near-zero attention collectives
+    (measured: 4.1 s wire, max-term 85.6 s vs 135 s).  Default (b); see
+    EXPERIMENTS.md §Perf qwen2 iterations 2–3."""
+    if cfg.attention == "mla":
+        # MLA params carry a single "heads" axis (w_uq/w_uk/w_uv/wo)
+        cands = [("heads", cfg.num_heads)]
+    else:
+        cands = [
+            ("kv_heads", cfg.num_kv_heads),
+            ("q_group", (cfg.num_heads // max(cfg.num_kv_heads, 1))),
+            ("heads", 0),
+        ]
+    for name, size in cands:
+        if size and size % model_size == 0:
+            return name
+    return "head_dim" if fallback == "head_dim" else None
+
+
+def make_rules(cfg, mesh: Mesh, *, mode: str = "fsdp_tp") -> dict:
+    dp = fsdp_axes(mesh)
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get(
+        "model", 1)
+    attn_axis = _attn_tp_axis(cfg, model_size)
+
+    rules = {
+        "layers": None, "mix5": None, "conv": None, "lora": None,
+        "vis_patch": None, "expert_gate": None,
+        "vocab": ("model",),
+        "embed": dp if mode != "replicated" else None,
+        "embed_out": None,
+        "mlp": ("model",),
+        "kv_heads": None, "q_group": None, "heads": None, "head_dim": None,
+        # ssm / rwkv inner dims shard over model (they are mlp-like)
+        "ssm_in": ("model",), "ssm_conv": ("model",),
+        "ssm_inner": ("model",), "heads_x_dim": ("model",),
+        "state": None,
+        "seq_sp": ("model",),   # Megatron-SP residual sequence sharding
+    }
+    if attn_axis is not None:
+        rules[attn_axis] = ("model",)
+    if cfg.moe is not None:
+        if cfg.moe.num_experts % model_size == 0:
+            rules["expert"] = ("model",)
+            rules["expert_mlp"] = None
+        else:
+            rules["expert"] = None
+            rules["expert_mlp"] = ("model",)
+    if mode == "replicated":
+        return {k: None for k in rules}
+    return rules
+
+
+def spec_for_axes(axes: Tuple[Optional[str], ...], rules: dict) -> P:
+    used = set()
+    parts = []
+    for ax in axes:
+        mesh_axes = rules.get(ax) if ax is not None else None
+        if mesh_axes is None:
+            parts.append(None)
+            continue
+        mesh_axes = tuple(a for a in mesh_axes if a not in used)
+        used.update(mesh_axes)
+        parts.append(mesh_axes if len(mesh_axes) != 1 else mesh_axes[0])
+        if not mesh_axes:
+            parts[-1] = None
+    return P(*parts)
+
+
+def param_shardings(specs, mesh: Mesh, rules: dict):
+    """NamedSharding tree for a ParamSpec tree.
+
+    Dims not divisible by their assigned mesh-axis product fall back to
+    replicated (pjit rejects uneven argument shardings) — e.g. whisper's
+    51866-entry vocab on a 16-way model axis."""
+    sizes = _axis_sizes(mesh)
+
+    def one(s: L.ParamSpec):
+        spec = spec_for_axes(s.axes, rules)
+        parts = []
+        for dim, part in zip(s.shape, tuple(spec) + (None,) * (
+                len(s.shape) - len(spec))):
+            if part is None:
+                parts.append(None)
+                continue
+            axes = (part,) if isinstance(part, str) else tuple(part)
+            n = int(np.prod([sizes[a] for a in axes]))
+            parts.append(part if dim % n == 0 else None)
+        return NamedSharding(mesh, P(*parts))
+    return L.spec_tree_map(one, specs)
+
+
+def tree_shardings_like(tree, mesh: Mesh, spec_fn):
+    """Map arbitrary pytrees (caches, opt states) to shardings via a
+    callable ``spec_fn(leaf) -> PartitionSpec``."""
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, spec_fn(leaf)), tree)
+
+
+def _axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _dp_size(mesh: Mesh) -> int:
+    sizes = _axis_sizes(mesh)
+    return int(np.prod([sizes[a] for a in fsdp_axes(mesh)] or [1]))
+
+
+def batch_shardings(batch_tree, mesh: Mesh):
+    """Host batch inputs: shard the leading (batch) dim over the data axes
+    when divisible (long_500k has batch 1 — stays replicated)."""
+    dp = fsdp_axes(mesh)
+    dpn = _dp_size(mesh)
+
+    def one(leaf):
+        ndim = len(leaf.shape)
+        if dp and ndim >= 1 and leaf.shape[0] % dpn == 0:
+            return NamedSharding(mesh, P(dp, *([None] * (ndim - 1))))
+        return NamedSharding(mesh, P(*([None] * ndim)))
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_shardings(cache_tree, mesh: Mesh):
+    """Decode caches: every array leaf is stacked per layer — (L, B, ...).
+    Shard batch (dim 1) over the data axes and the trailing feature dim over
+    model, each only when divisible."""
+    dp = fsdp_axes(mesh)
+    dpn = _dp_size(mesh)
+    model_size = _axis_sizes(mesh).get("model", 1)
+
+    def one(leaf):
+        shape = leaf.shape
+        ndim = len(shape)
+        parts = [None] * ndim
+        if ndim >= 2 and dp and shape[1] % dpn == 0:
+            parts[1] = dp
+        if ndim >= 3 and model_size > 1 and shape[-1] % model_size == 0 \
+                and shape[-1] >= model_size:
+            parts[-1] = "model"
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(one, cache_tree)

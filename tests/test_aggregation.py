@@ -1,0 +1,55 @@
+"""Aggregation unit tests: masked weighted FedAvg + staleness discounts."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation_weights, fed_aggregate, \
+    fed_aggregate_delta
+
+
+def test_fedavg_equivalence_when_uniform():
+    g = {"w": jnp.zeros((3,))}
+    c = {"w": jnp.stack([jnp.full((3,), 1.0), jnp.full((3,), 2.0),
+                         jnp.full((3,), 3.0)])}
+    w = aggregation_weights(jnp.array([True, True, True]))
+    out = fed_aggregate(g, c, w)
+    np.testing.assert_allclose(out["w"], 2.0)
+
+
+def test_failed_devices_contribute_zero():
+    g = {"w": jnp.zeros((2,))}
+    c = {"w": jnp.stack([jnp.full((2,), 10.0), jnp.full((2,), 2.0)])}
+    w = aggregation_weights(jnp.array([False, True]))
+    out = fed_aggregate(g, c, w)
+    np.testing.assert_allclose(out["w"], 2.0)
+
+
+def test_empty_round_keeps_global():
+    g = {"w": jnp.full((2,), 7.0)}
+    c = {"w": jnp.zeros((3, 2))}
+    w = aggregation_weights(jnp.zeros((3,), bool))
+    out = fed_aggregate(g, c, w)
+    np.testing.assert_allclose(out["w"], 7.0)
+
+
+def test_sample_weighting():
+    g = {"w": jnp.zeros((1,))}
+    c = {"w": jnp.array([[0.0], [10.0]])}
+    w = aggregation_weights(jnp.array([True, True]),
+                            n_samples=jnp.array([1.0, 3.0]))
+    out = fed_aggregate(g, c, w)
+    np.testing.assert_allclose(out["w"], 7.5)
+
+
+def test_staleness_discount_downweights():
+    w = aggregation_weights(jnp.array([True, True]),
+                            staleness=jnp.array([0.0, 9.0]),
+                            staleness_discount=1.0)
+    assert float(w[0]) == 1.0
+    np.testing.assert_allclose(float(w[1]), 0.1)
+
+
+def test_delta_aggregation_server_lr():
+    g = {"w": jnp.full((1,), 1.0)}
+    c = {"w": jnp.array([[3.0]])}
+    out = fed_aggregate_delta(g, c, jnp.array([1.0]), server_lr=0.5)
+    np.testing.assert_allclose(out["w"], 2.0)     # 1 + 0.5·(3−1)

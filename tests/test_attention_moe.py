@@ -1,0 +1,149 @@
+"""Attention-variant and MoE behaviour tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.attention import chunked_attention, dense_attention
+from repro.models.moe import moe_forward
+
+
+def _qkv(B=2, S=128, Hk=2, G=2, D=32, seed=0):
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(B, S, Hk, G, D), jnp.float32)
+    k = jnp.asarray(rng.randn(B, S, Hk, D), jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, Hk, D), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("window", [None, 32])
+@pytest.mark.parametrize("q_chunk,k_chunk", [(32, 32), (64, 32), (128, 64)])
+def test_chunked_equals_dense(window, q_chunk, k_chunk):
+    q, k, v = _qkv()
+    got = chunked_attention(q, k, v, causal=True, window=window,
+                            scale=0.17, q_chunk=q_chunk, k_chunk=k_chunk)
+    want = dense_attention(q, k, v, causal=True, window=window, scale=0.17)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_unroll_causal_equals_scan():
+    q, k, v = _qkv(S=128)
+    a = chunked_attention(q, k, v, causal=True, window=None, scale=0.2,
+                          q_chunk=32, k_chunk=32, unroll_causal=True)
+    b = chunked_attention(q, k, v, causal=True, window=None, scale=0.2,
+                          q_chunk=32, k_chunk=32, unroll_causal=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_swa_ignores_distant_context():
+    """With window w, perturbing a key more than w behind a query must not
+    change that query's output."""
+    q, k, v = _qkv(S=64)
+    w = 16
+    out1 = dense_attention(q, k, v, causal=True, window=w, scale=0.2)
+    k2 = k.at[:, 10].add(100.0)       # token 10 is > w behind query 40
+    v2 = v.at[:, 10].add(100.0)
+    out2 = dense_attention(q, k2, v2, causal=True, window=w, scale=0.2)
+    np.testing.assert_allclose(np.asarray(out1[:, 40:]),
+                               np.asarray(out2[:, 40:]), rtol=1e-5,
+                               atol=1e-5)
+    # ...but it does change queries within the window
+    assert float(jnp.abs(out1[:, 12] - out2[:, 12]).max()) > 1e-3
+
+
+def test_causality():
+    """Perturbing a future token never changes past outputs."""
+    q, k, v = _qkv(S=32)
+    out1 = chunked_attention(q, k, v, causal=True, window=None, scale=0.2,
+                             q_chunk=16, k_chunk=16)
+    k2 = k.at[:, 20].add(10.0)
+    v2 = v.at[:, 20].add(10.0)
+    out2 = chunked_attention(q, k2, v2, causal=True, window=None,
+                             scale=0.2, q_chunk=16, k_chunk=16)
+    np.testing.assert_allclose(np.asarray(out1[:, :20]),
+                               np.asarray(out2[:, :20]), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def _moe_setup(seed=0):
+    cfg = get_config("mixtral-8x7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(seed))
+    p = jax.tree.map(lambda a: a[0], params["blocks"]["moe"])
+    return cfg, p
+
+
+def test_moe_output_shape_and_finite():
+    cfg, p = _moe_setup()
+    x = jax.random.normal(jax.random.key(1), (2, 32, cfg.d_model))
+    y, aux = moe_forward(p, x, cfg)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+    assert float(aux) >= 0.0
+
+
+def test_moe_grouping_invariance():
+    """Grouped dispatch (G>1) ~= ungrouped on balanced inputs; exact when
+    capacity is not exceeded."""
+    cfg, p = _moe_setup()
+    import dataclasses
+    # generous capacity so no token is dropped in either grouping
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    x = jax.random.normal(jax.random.key(2), (4, 16, cfg.d_model))
+
+    class E1:
+        moe_groups = 1
+
+    class E4:
+        moe_groups = 4
+        mesh = None
+        rules = None
+    y1, _ = moe_forward(p, x, cfg, E1)
+    y4, _ = moe_forward(p, x, cfg, E4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y4), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    """With a tiny capacity factor some tokens must be dropped (zero
+    contribution), never NaN."""
+    cfg, p = _moe_setup()
+    import dataclasses
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.25))
+    x = jax.random.normal(jax.random.key(3), (2, 32, cfg.d_model))
+    y, _ = moe_forward(p, x, cfg)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_moe_router_aux_penalizes_imbalance():
+    """A router forced to one expert yields a larger aux loss than the
+    learned (roughly balanced) router."""
+    cfg, p = _moe_setup()
+    x = jax.random.normal(jax.random.key(4), (2, 64, cfg.d_model))
+    _, aux_balanced = moe_forward(p, x, cfg)
+    p_bad = dict(p)
+    bias = jnp.zeros((cfg.d_model, cfg.moe.num_experts))
+    p_bad["router"] = bias.at[:, 0].set(10.0)   # everything to expert 0
+    _, aux_collapsed = moe_forward(p_bad, x, cfg)
+    assert float(aux_collapsed) > float(aux_balanced)
+
+
+def test_deepseek_shared_experts_always_active():
+    cfg = get_config("deepseek-v2-236b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    p = jax.tree.map(lambda a: a[0], params["blocks"]["moe"])
+    assert "shared" in p
+    x = jax.random.normal(jax.random.key(1), (1, 16, cfg.d_model))
+    y, _ = moe_forward(p, x, cfg)
+    assert bool(jnp.isfinite(y).all())

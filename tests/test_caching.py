@@ -1,0 +1,72 @@
+"""C3 unit tests: local model caching."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (adaptive_cache_interval, clear_cache, has_cache,
+                        init_caches, resume_params, staleness, write_cache)
+
+
+def _caches(n=4):
+    return init_caches({"w": jnp.zeros((2, 2)), "b": jnp.zeros((2,))}, n)
+
+
+def test_init_empty():
+    c = _caches()
+    assert not bool(has_cache(c).any())
+    assert bool((staleness(c, 5) > 1e5).all())
+
+
+def test_rolling_write_keeps_latest_only():
+    c = _caches()
+    mask = jnp.array([True, False, False, False])
+    p1 = {"w": jnp.ones((4, 2, 2)), "b": jnp.ones((4, 2))}
+    p2 = {"w": 2 * jnp.ones((4, 2, 2)), "b": 2 * jnp.ones((4, 2))}
+    c = write_cache(c, mask, p1, jnp.full((4,), 0.5), 3)
+    c = write_cache(c, mask, p2, jnp.full((4,), 0.75), 7)
+    np.testing.assert_allclose(c.params["w"][0], 2.0)   # latest wins
+    assert int(c.round_stamp[0]) == 7
+    assert float(c.progress[0]) == 0.75
+    # unmasked untouched
+    np.testing.assert_allclose(c.params["w"][1], 0.0)
+    assert int(c.round_stamp[1]) == -1
+
+
+def test_staleness_counts_rounds():
+    c = _caches()
+    c = write_cache(c, jnp.array([True, True, False, False]),
+                    {"w": jnp.ones((4, 2, 2)), "b": jnp.ones((4, 2))},
+                    jnp.full((4,), 0.5), 3)
+    s = staleness(c, 10)
+    np.testing.assert_allclose(s[:2], 7.0)
+    assert float(s[2]) > 1e5
+
+
+def test_clear_on_upload():
+    c = _caches()
+    mask = jnp.array([True, True, False, False])
+    c = write_cache(c, mask, {"w": jnp.ones((4, 2, 2)),
+                              "b": jnp.ones((4, 2))},
+                    jnp.full((4,), 0.5), 1)
+    c = clear_cache(c, jnp.array([True, False, False, False]))
+    assert not bool(has_cache(c)[0])
+    assert bool(has_cache(c)[1])
+
+
+def test_resume_picks_cache_or_global():
+    c = _caches()
+    stacked = {"w": 5 * jnp.ones((4, 2, 2)), "b": 5 * jnp.ones((4, 2))}
+    c = write_cache(c, jnp.ones((4,), bool), stacked,
+                    jnp.full((4,), 0.5), 0)
+    g = {"w": 9 * jnp.ones((2, 2)), "b": 9 * jnp.ones((2,))}
+    start = resume_params(c, g, jnp.array([True, False, True, False]))
+    np.testing.assert_allclose(start["w"][0], 5.0)
+    np.testing.assert_allclose(start["w"][1], 9.0)
+
+
+def test_adaptive_frequency_direction():
+    """Paper §4.2: low battery / flaky network ⇒ cache MORE often."""
+    lo = adaptive_cache_interval(60.0, jnp.array([0.2]), jnp.array([0.3]))
+    hi = adaptive_cache_interval(60.0, jnp.array([1.0]), jnp.array([1.0]))
+    assert float(lo[0]) < float(hi[0])
+    assert 25.0 <= float(lo[0]) <= 60.0       # ~30s around a 60s base
+    assert float(hi[0]) <= 300.0              # capped at 5 min

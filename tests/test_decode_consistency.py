@@ -1,0 +1,107 @@
+"""Decode-vs-full-forward consistency: prefill + step == teacher forcing.
+
+For every cached-decode family: run the full forward on a prompt, then
+prefill the prompt and decode the next token — the decode logits must match
+the forward logits at the last position.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import ExecConfig, build_model
+
+DECODE_ARCHS = ["qwen2-7b", "h2o-danube-1.8b", "mixtral-8x7b",
+                "deepseek-v2-236b", "zamba2-1.2b", "rwkv6-7b"]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_prefill_then_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 2, 32
+    rng = jax.random.key(1)
+    tokens = jax.random.randint(rng, (B, S + 1), 0, cfg.vocab_size)
+
+    # teacher-forced forward over S+1 tokens
+    ecfg = ExecConfig(attn_impl="dense")
+    full = model.logits(params, {"tokens": tokens}, ecfg)      # (B,S+1,V)
+
+    # prefill on S tokens (with one slot of decode headroom), then decode
+    _, cache = model.prefill(params, {"tokens": tokens[:, :S]}, ecfg,
+                             max_len=S + 1)
+    pos = jnp.full((B, 1), S, jnp.int32)
+    step_logits, _ = model.decode_step(params, tokens[:, S:S + 1], pos,
+                                       cache)
+    np.testing.assert_allclose(
+        np.asarray(step_logits[:, 0]), np.asarray(full[:, S]),
+        rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "rwkv6-7b", "zamba2-1.2b"])
+def test_multistep_decode_matches_forward(arch):
+    """Decode 4 consecutive tokens; each must match teacher forcing."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S, K = 1, 16, 4
+    tokens = jax.random.randint(jax.random.key(2), (B, S + K), 0,
+                                cfg.vocab_size)
+    ecfg = ExecConfig(attn_impl="dense")
+    full = model.logits(params, {"tokens": tokens}, ecfg)
+
+    _, cache = model.prefill(params, {"tokens": tokens[:, :S]}, ecfg,
+                             max_len=S + K)
+    for k in range(K):
+        pos = jnp.full((B, 1), S + k, jnp.int32)
+        lg, cache = model.decode_step(params, tokens[:, S + k:S + k + 1],
+                                      pos, cache)
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0]), np.asarray(full[:, S + k]),
+            rtol=3e-2, atol=3e-2)
+
+
+def test_swa_ring_cache_decode():
+    """SWA archs decode correctly once the ring cache wraps."""
+    cfg = get_config("h2o-danube-1.8b").reduced()   # window 16
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 1, 24                                    # prompt exceeds window
+    tokens = jax.random.randint(jax.random.key(3), (B, S + 2), 0,
+                                cfg.vocab_size)
+    ecfg = ExecConfig(attn_impl="dense")
+    full = model.logits(params, {"tokens": tokens}, ecfg)
+    _, cache = model.prefill(params, {"tokens": tokens[:, :S]}, ecfg)
+    lg, cache = model.decode_step(
+        params, tokens[:, S:S + 1], jnp.full((B, 1), S, jnp.int32), cache)
+    np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(full[:, S]),
+                               rtol=3e-2, atol=3e-2)
+    lg2, _ = model.decode_step(
+        params, tokens[:, S + 1:S + 2], jnp.full((B, 1), S + 1, jnp.int32),
+        cache)
+    np.testing.assert_allclose(np.asarray(lg2[:, 0]),
+                               np.asarray(full[:, S + 1]),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_whisper_decode_matches_teacher_forcing():
+    cfg = get_config("whisper-large-v3").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, Senc = 2, 32
+    Sdec = cfg.encdec.max_target_len
+    frames = jax.random.normal(jax.random.key(1), (B, Senc, cfg.d_model))
+    dec = jax.random.randint(jax.random.key(2), (B, Sdec), 0,
+                             cfg.vocab_size)
+    ecfg = ExecConfig(attn_impl="dense")
+    full = model.logits(params, {"frames": frames, "dec_tokens": dec},
+                        ecfg)
+    _, cache = model.prefill(params, {"frames": frames}, ecfg)
+    for k in range(3):
+        pos = jnp.full((B, 1), k, jnp.int32)
+        lg, cache = model.decode_step(params, dec[:, k:k + 1], pos, cache)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(full[:, k]),
+                                   rtol=3e-2, atol=3e-2)

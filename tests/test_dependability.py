@@ -1,0 +1,42 @@
+"""C1 unit tests: Beta-posterior dependability assessment (Eq. 1)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (dependability, init_belief, update_belief, variance)
+
+
+def test_neutral_prior():
+    b = init_belief(8)
+    np.testing.assert_allclose(dependability(b), 0.5)
+
+
+def test_eq1_update_matches_paper():
+    """α_new = α + s, β_new = β + f, E[R] = α_new / (α_new + β_new)."""
+    b = init_belief(3, alpha0=2.0, beta0=2.0)
+    s = jnp.array([3, 0, 1])
+    f = jnp.array([0, 4, 1])
+    b2 = update_belief(b, s, f)
+    np.testing.assert_allclose(b2.alpha, [5, 2, 3])
+    np.testing.assert_allclose(b2.beta, [2, 6, 3])
+    np.testing.assert_allclose(dependability(b2),
+                               [5 / 7, 2 / 8, 3 / 6])
+
+
+def test_successes_raise_failures_lower():
+    b = init_belief(1)
+    up = update_belief(b, jnp.array([5]), jnp.array([0]))
+    dn = update_belief(b, jnp.array([0]), jnp.array([5]))
+    assert float(dependability(up)[0]) > 0.5 > float(dependability(dn)[0])
+
+
+def test_variance_shrinks_with_evidence():
+    b = init_belief(1)
+    b2 = update_belief(b, jnp.array([10]), jnp.array([10]))
+    assert float(variance(b2)[0]) < float(variance(b)[0])
+
+
+def test_convergence_to_true_rate():
+    """After many observations the posterior mean approaches s/(s+f)."""
+    b = init_belief(1)
+    b2 = update_belief(b, jnp.array([700]), jnp.array([300]))
+    assert abs(float(dependability(b2)[0]) - 0.7) < 0.01

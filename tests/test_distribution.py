@@ -1,0 +1,95 @@
+"""C4 unit tests: staleness-aware distribution (Eq. 4)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DistributorState, init_distributor,
+                        plan_distribution, predicted_comm_cost)
+
+KW = dict(lam=1.0, mu=0.5, w_min=1.0, w_max=50.0)
+
+
+def test_u_devices_always_receive():
+    st = init_distributor(3.0)
+    sel = jnp.array([True, True, True, False])
+    in_v = jnp.array([False, False, True, False])
+    cache = jnp.array([False, False, True, False])
+    stale = jnp.array([0.0, 0.0, 1.0, 0.0])
+    plan = plan_distribution(st, sel, in_v, cache, stale, **KW)
+    # devices in U (not in V) that are selected must get the model
+    assert bool(plan.distribute[0]) and bool(plan.distribute[1])
+    # fresh-cached V device resumes (staleness 1 < W)
+    assert bool(plan.resume[2]) and not bool(plan.distribute[2])
+    assert not bool(plan.distribute[3])     # unselected gets nothing
+
+
+def test_overly_stale_cache_forces_distribution():
+    st = DistributorState(jnp.float32(3.0), jnp.float32(5.0),
+                          jnp.float32(2.0))
+    sel = jnp.array([True, True])
+    in_v = jnp.array([True, True])
+    cache = jnp.array([True, True])
+    stale = jnp.array([1.0, 40.0])
+    plan = plan_distribution(st, sel, in_v, cache, stale, **KW)
+    assert bool(plan.resume[0])
+    assert bool(plan.distribute[1])         # 40 rounds stale ⇒ refresh
+
+
+def test_eq4_staleness_pressure_lowers_threshold():
+    """H_new > H_old ⇒ W' shrinks (more refreshes)."""
+    st = DistributorState(jnp.float32(10.0), jnp.float32(2.0),
+                          jnp.float32(1.0))
+    sel = jnp.ones((4,), bool)
+    in_v = jnp.ones((4,), bool)
+    cache = jnp.ones((4,), bool)
+    stale = jnp.full((4,), 8.0)             # H_new = 8 > H_old = 2
+    plan = plan_distribution(st, sel, in_v, cache, stale, **KW)
+    assert float(plan.state.w_threshold) < 10.0
+
+
+def test_eq4_comm_pressure_raises_threshold():
+    """N_new > N_old ⇒ W grows back (fewer distributions)."""
+    st = DistributorState(jnp.float32(5.0), jnp.float32(6.0),
+                          jnp.float32(1.0))
+    sel = jnp.ones((6,), bool)
+    in_v = jnp.ones((6,), bool)
+    cache = jnp.ones((6,), bool)
+    stale = jnp.array([6.0, 6.0, 6.0, 6.0, 6.0, 6.0])
+    plan = plan_distribution(st, sel, in_v, cache, stale, **KW)
+    w_prime = 5.0 * (1.0 - 1.0 * (6.0 - 6.0) / 6.0)     # = 5.0
+    n_new = float((stale > w_prime).sum())               # = 6
+    expect = w_prime * (1.0 + 0.5 * (n_new - 1.0) / 1.0)
+    np.testing.assert_allclose(float(plan.state.w_threshold),
+                               min(expect, 50.0), rtol=1e-5)
+
+
+def test_threshold_clipped():
+    st = DistributorState(jnp.float32(2.0), jnp.float32(1.0),
+                          jnp.float32(1.0))
+    sel = jnp.ones((2,), bool)
+    stale = jnp.array([500.0, 500.0])
+    plan = plan_distribution(st, sel, jnp.ones((2,), bool),
+                             jnp.ones((2,), bool), stale, **KW)
+    assert 1.0 <= float(plan.state.w_threshold) <= 50.0
+
+
+def test_full_and_least_modes():
+    st = init_distributor()
+    sel = jnp.array([True, True, True])
+    in_v = jnp.array([False, True, True])
+    cache = jnp.array([False, True, True])
+    stale = jnp.array([0.0, 2.0, 30.0])
+    full = plan_distribution(st, sel, in_v, cache, stale, mode="full", **KW)
+    assert bool(full.distribute.all()) and not bool(full.resume.any())
+    least = plan_distribution(st, sel, in_v, cache, stale, mode="least",
+                              **KW)
+    assert bool(least.resume[1]) and bool(least.resume[2])
+    assert bool(least.distribute[0])
+
+
+def test_predicted_cost_alg2():
+    """B_pred = |S_distr| + |S| · R̄ (Algorithm 2 line 11)."""
+    dist = jnp.array([True, True, False, False])
+    sel = jnp.array([True, True, True, True])
+    np.testing.assert_allclose(
+        float(predicted_comm_cost(dist, sel, jnp.float32(0.75))),
+        2 + 4 * 0.75)

@@ -1,0 +1,129 @@
+"""Property-based tests (hypothesis) on FLUDE's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import core
+from repro.configs.base import FLConfig
+import importlib
+
+D = importlib.import_module("repro.core.dependability")
+DI = importlib.import_module("repro.core.distribution")
+SE = importlib.import_module("repro.core.selection")
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.lists(st.tuples(st.integers(0, 50), st.integers(0, 50)),
+                min_size=1, max_size=16))
+def test_dependability_bounded_and_monotone(obs):
+    """E[R] ∈ (0,1); adding a success never lowers it."""
+    s = jnp.array([o[0] for o in obs], jnp.float32)
+    f = jnp.array([o[1] for o in obs], jnp.float32)
+    b = D.update_belief(D.init_belief(len(obs)), s, f)
+    r = D.dependability(b)
+    assert bool((r > 0).all()) and bool((r < 1).all())
+    b2 = D.update_belief(b, jnp.ones_like(s), jnp.zeros_like(f))
+    assert bool((D.dependability(b2) >= r - 1e-7).all())
+
+
+@given(st.integers(4, 64), st.integers(1, 16),
+       st.floats(0.0, 1.0), st.integers(0, 2 ** 31 - 1))
+def test_selection_count_and_membership(n, x, eps, seed):
+    x = min(x, n)
+    rng = np.random.RandomState(seed)
+    online = jnp.asarray(rng.rand(n) < 0.7)
+    explored = jnp.asarray(rng.rand(n) < 0.5)
+    b = D.init_belief(n)
+    res = SE.select_participants(
+        b, jnp.zeros((n,), jnp.int32), explored, online,
+        jnp.float32(rng.rand() * 100), jnp.int32(x), jnp.float32(eps),
+        0.5, jax.random.key(seed % 1000))
+    sel = np.asarray(res.selected)
+    assert sel.sum() == min(x, int(np.asarray(online).sum()))
+    assert not (sel & ~np.asarray(online)).any()
+    # exploit/explore partition the selection
+    assert not (np.asarray(res.exploited)
+                & np.asarray(res.explored_new)).any()
+    assert (sel == (np.asarray(res.exploited)
+                    | np.asarray(res.explored_new))).all()
+
+
+@given(st.floats(0.01, 0.99), st.integers(0, 100), st.floats(0.1, 100.0),
+       st.floats(0.0, 2.0))
+def test_priority_penalty_only_above_threshold(dep, q, Q, sigma):
+    n = 1000.0
+    b = D.update_belief(D.init_belief(1, 0.0, 0.0),
+                        jnp.array([dep * n]), jnp.array([(1 - dep) * n]))
+    P = SE.priority(b, jnp.array([q]), jnp.float32(Q), sigma)
+    R = float(D.dependability(b)[0])
+    if q <= Q:
+        np.testing.assert_allclose(float(P[0]), R, rtol=1e-5)
+    else:
+        assert float(P[0]) <= R + 1e-6
+
+
+@given(st.lists(st.floats(0.0, 60.0), min_size=2, max_size=12),
+       st.floats(1.0, 20.0))
+def test_distribution_covers_all_selected(stales, w0):
+    """Every selected device either receives the model or resumes."""
+    n = len(stales)
+    sel = jnp.ones((n,), bool)
+    in_v = jnp.asarray([i % 2 == 0 for i in range(n)])
+    cache = in_v
+    plan = DI.plan_distribution(
+        DI.DistributorState(jnp.float32(w0), jnp.float32(1.0),
+                            jnp.float32(1.0)),
+        sel, in_v, cache, jnp.asarray(stales, jnp.float32),
+        lam=1.0, mu=0.5, w_min=1.0, w_max=50.0)
+    covered = plan.distribute | plan.resume
+    assert bool((covered == sel).all())
+    assert not bool((plan.distribute & plan.resume).any())
+    assert 1.0 <= float(plan.state.w_threshold) <= 50.0
+
+
+@given(st.lists(st.floats(0.001, 10.0), min_size=1, max_size=8),
+       st.integers(0, 2 ** 31 - 1))
+def test_aggregation_convex_hull(ws, seed):
+    """Weighted aggregate lies in the convex hull of client values."""
+    n = len(ws)
+    rng = np.random.RandomState(seed)
+    vals = rng.randn(n, 3).astype(np.float32)
+    g = {"w": jnp.zeros((3,))}
+    out = core.fed_aggregate(g, {"w": jnp.asarray(vals)},
+                             jnp.asarray(ws, jnp.float32))
+    o = np.asarray(out["w"])
+    assert (o >= vals.min(0) - 1e-4).all()
+    assert (o <= vals.max(0) + 1e-4).all()
+
+
+@given(st.integers(1, 6), st.integers(0, 2 ** 31 - 1))
+def test_cache_roundtrip_identity(k, seed):
+    """write → resume returns exactly the cached state for masked clients."""
+    rng = np.random.RandomState(seed)
+    n = 5
+    tmpl = {"w": jnp.zeros((k, 2))}
+    caches = core.init_caches(tmpl, n)
+    stacked = {"w": jnp.asarray(rng.randn(n, k, 2), jnp.float32)}
+    mask = jnp.asarray(rng.rand(n) < 0.5)
+    caches = core.write_cache(caches, mask, stacked,
+                              jnp.full((n,), 0.5), 2)
+    g = {"w": jnp.asarray(rng.randn(k, 2), jnp.float32)}
+    start = core.resume_params(caches, g, mask)
+    for i in range(n):
+        want = stacked["w"][i] if bool(mask[i]) else g["w"]
+        np.testing.assert_allclose(start["w"][i], want)
+
+
+@given(st.integers(8, 40), st.integers(1, 10), st.floats(1.0, 30.0))
+def test_budget_respected(n, x, budget):
+    cfg = FLConfig(num_clients=n, clients_per_round=min(x, n),
+                   comm_budget=budget)
+    stt = core.init_state(cfg)
+    caches = core.init_caches({"w": jnp.zeros((1,))}, n)
+    plan = core.plan_round(stt, caches, jnp.ones((n,), bool), cfg,
+                           jax.random.key(0))
+    assert float(plan.predicted_cost) <= budget + 1e-4 or \
+        int(plan.selected.sum()) <= 1

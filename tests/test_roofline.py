@@ -1,0 +1,92 @@
+"""Roofline HLO-analyzer tests: exact flop counts + trip-count recovery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.analysis import Roofline, build_roofline, model_flops
+from repro.roofline.hlo import analyze_hlo_text
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_matmul_flops_exact():
+    a = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+    c = _compile(lambda x, y: x @ y, a, b)
+    cost = analyze_hlo_text(c.as_text())
+    assert abs(cost.flops - 2 * 256 * 512 * 128) / (2 * 256 * 512 * 128) \
+        < 0.01
+
+
+def test_scan_trip_count_multiplied():
+    def g(a, ws):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+        y, _ = jax.lax.scan(body, a, ws)
+        return y
+
+    ws = jax.ShapeDtypeStruct((10, 128, 128), jnp.float32)
+    a = jax.ShapeDtypeStruct((32, 128), jnp.float32)
+    cost = analyze_hlo_text(_compile(g, a, ws).as_text())
+    expect = 10 * 2 * 32 * 128 * 128
+    assert abs(cost.flops - expect) / expect < 0.05
+    # XLA's own cost_analysis does NOT multiply (documents why we parse)
+    xla = _compile(g, a, ws).cost_analysis()["flops"]
+    assert xla < cost.flops / 5
+
+
+def test_nested_scan():
+    def h(a, ws):
+        def outer(x, grp):
+            def inner(x, w):
+                return x @ w, None
+            x, _ = jax.lax.scan(inner, x, grp)
+            return x, None
+        y, _ = jax.lax.scan(outer, a, ws)
+        return y
+
+    ws = jax.ShapeDtypeStruct((5, 4, 64, 64), jnp.float32)
+    a = jax.ShapeDtypeStruct((16, 64), jnp.float32)
+    cost = analyze_hlo_text(_compile(h, a, ws).as_text())
+    expect = 20 * 2 * 16 * 64 * 64
+    assert abs(cost.flops - expect) / expect < 0.05
+
+
+def test_grad_roughly_triples_flops():
+    def f(w, x):
+        return jnp.sum(jnp.tanh(x @ w) ** 2)
+
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    x = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+    fwd = analyze_hlo_text(_compile(f, w, x).as_text()).flops
+    bwd = analyze_hlo_text(
+        _compile(jax.grad(f), w, x).as_text()).flops
+    assert 2.0 < bwd / fwd < 4.5
+
+
+def test_roofline_terms_and_dominance():
+    r = Roofline(
+        arch="x", shape="train_4k", mesh="single",
+        flops_per_device=197e12,          # exactly 1 s of compute
+        bytes_per_device=819e9 * 2,       # 2 s of HBM
+        collective_bytes_per_device=0.0,
+        collective_wire_bytes=50e9 * 0.5,  # 0.5 s of ICI
+        collective_breakdown={}, model_flops_total=197e12 * 128,
+        n_devices=256, notes=[])
+    assert abs(r.compute_s - 1.0) < 1e-6
+    assert abs(r.memory_s - 2.0) < 1e-6
+    assert abs(r.collective_s - 0.5) < 1e-6
+    assert r.dominant == "memory"
+    assert abs(r.useful_flops_fraction - 0.5) < 1e-6
+
+
+def test_model_flops_reference():
+    from repro.configs import INPUT_SHAPES, get_config
+    cfg = get_config("qwen2-7b")
+    shp = INPUT_SHAPES["train_4k"]
+    f = model_flops(cfg, shp, 7.6e9, "train")
+    assert abs(f - 6 * 7.6e9 * 256 * 4096) < 1e9
+    d = model_flops(cfg, INPUT_SHAPES["decode_32k"], 7.6e9, "decode")
+    assert abs(d - 2 * 7.6e9 * 128) < 1e6

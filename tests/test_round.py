@@ -1,0 +1,79 @@
+"""C5 unit tests: Algorithm 2 round process."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.configs.base import FLConfig
+
+
+def _setup(n=32, budget=float("inf")):
+    cfg = FLConfig(num_clients=n, clients_per_round=8, comm_budget=budget)
+    st = core.init_state(cfg)
+    caches = core.init_caches({"w": jnp.zeros((2,))}, n)
+    return cfg, st, caches
+
+
+def test_plan_selects_requested_count():
+    cfg, st, caches = _setup()
+    plan = core.plan_round(st, caches, jnp.ones((32,), bool), cfg,
+                           jax.random.key(0))
+    assert int(plan.selected.sum()) == 8
+    assert int((plan.distribute | plan.resume).sum()) == 8
+
+
+def test_budget_shrinks_participants():
+    cfg, st, caches = _setup(budget=6.0)
+    plan = core.plan_round(st, caches, jnp.ones((32,), bool), cfg,
+                           jax.random.key(0))
+    assert float(plan.predicted_cost) <= 6.0 + 1e-5
+    assert int(plan.selected.sum()) < 8
+
+
+def test_quorum_is_S_times_Rbar():
+    cfg, st, caches = _setup()
+    plan = core.plan_round(st, caches, jnp.ones((32,), bool), cfg,
+                           jax.random.key(0))
+    # fresh fleet: R̄ = 0.5 (Beta(2,2) prior) ⇒ quorum = ceil(8·0.5) = 4
+    assert float(plan.quorum) == 4.0
+
+
+def test_update_after_round_bookkeeping():
+    cfg, st, caches = _setup()
+    plan = core.plan_round(st, caches, jnp.ones((32,), bool), cfg,
+                           jax.random.key(0))
+    received = plan.selected & (jnp.arange(32) % 2 == 0)
+    st2 = core.update_after_round(st, plan, received, cfg)
+    assert int(st2.round) == 1
+    assert float(st2.epsilon) < float(st.epsilon)
+    assert float(st2.total_selected) == float(plan.selected.sum())
+    # successes raised alpha, failures raised beta
+    suc = plan.selected & received
+    fail = plan.selected & ~received
+    np.testing.assert_allclose(
+        np.asarray(st2.belief.alpha - st.belief.alpha),
+        np.asarray(suc, np.float32))
+    np.testing.assert_allclose(
+        np.asarray(st2.belief.beta - st.belief.beta),
+        np.asarray(fail, np.float32))
+    # V membership: selected-but-failed
+    np.testing.assert_array_equal(np.asarray(st2.in_v), np.asarray(fail))
+
+
+def test_dependable_devices_win_over_rounds():
+    """Over rounds, FLUDE's selection mass shifts to dependable devices."""
+    cfg = FLConfig(num_clients=20, clients_per_round=5,
+                   epsilon_init=0.5, epsilon_decay=0.8)
+    st = core.init_state(cfg)
+    caches = core.init_caches({"w": jnp.zeros((1,))}, 20)
+    rng = jax.random.key(0)
+    dependable = jnp.arange(20) < 10     # first half always succeed
+    picks = np.zeros(20)
+    for r in range(40):
+        rng, k1, k2 = jax.random.split(rng, 3)
+        plan = core.plan_round(st, caches, jnp.ones((20,), bool), cfg, k1)
+        rand = jax.random.uniform(k2, (20,))
+        received = plan.selected & (dependable | (rand < 0.1))
+        st = core.update_after_round(st, plan, received, cfg)
+        picks += np.asarray(plan.selected, np.float32)
+    assert picks[:10].sum() > 1.5 * picks[10:].sum()

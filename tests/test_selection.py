@@ -1,0 +1,83 @@
+"""C2 unit tests: Algorithm 1 adaptive selection (Eqs. 2–3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (freq_threshold, init_belief, priority,
+                        select_participants, update_belief, decay_epsilon)
+
+
+def _belief(dep):
+    """Belief whose posterior mean is exactly ``dep`` (scaled counts)."""
+    dep = jnp.asarray(dep, jnp.float32)
+    n = 1000.0
+    b = init_belief(dep.shape[0], 0.0, 0.0)
+    return update_belief(b, dep * n, (1 - dep) * n)
+
+
+def test_eq2_priority_penalty():
+    """P = R·(Q/q)^(1(Q<q)·σ): only above-threshold devices penalized."""
+    b = _belief([0.8, 0.8, 0.8])
+    q = jnp.array([0, 5, 20])          # Q will be 10
+    P = priority(b, q, 10.0, sigma=0.5)
+    np.testing.assert_allclose(P[0], 0.8, atol=1e-3)   # q=0: no penalty
+    np.testing.assert_allclose(P[1], 0.8, atol=1e-3)   # q<Q: no penalty
+    np.testing.assert_allclose(P[2], 0.8 * (10 / 20) ** 0.5, atol=1e-3)
+
+
+def test_eq3_threshold():
+    assert float(freq_threshold(jnp.float32(320.0), 64)) == 5.0
+
+
+def test_exploit_prefers_dependable():
+    N = 32
+    dep = jnp.linspace(0.05, 0.95, N)
+    b = _belief(dep)
+    res = select_participants(
+        b, jnp.zeros(N, jnp.int32), jnp.ones(N, bool), jnp.ones(N, bool),
+        jnp.float32(0.0), jnp.int32(8), jnp.float32(0.0), 0.5,
+        jax.random.key(0))
+    assert int(res.selected.sum()) == 8
+    # with epsilon=0 and all explored: the top-8 dependable are chosen
+    assert bool(res.selected[-8:].all())
+
+
+def test_exploration_fraction():
+    N = 40
+    b = _belief(jnp.full((N,), 0.5))
+    explored = jnp.arange(N) < 20
+    res = select_participants(
+        b, jnp.zeros(N, jnp.int32), explored, jnp.ones(N, bool),
+        jnp.float32(100.0), jnp.int32(10), jnp.float32(0.5), 0.5,
+        jax.random.key(1))
+    assert int(res.selected.sum()) == 10
+    assert int(res.explored_new.sum()) == 5          # ε·X = 5 new devices
+    assert not bool((res.explored_new & explored).any())
+
+
+def test_respects_online_mask():
+    N = 16
+    b = _belief(jnp.full((N,), 0.9))
+    online = jnp.arange(N) % 2 == 0
+    res = select_participants(
+        b, jnp.zeros(N, jnp.int32), jnp.ones(N, bool), online,
+        jnp.float32(0.0), jnp.int32(12), jnp.float32(0.0), 0.5,
+        jax.random.key(2))
+    assert not bool((res.selected & ~online).any())
+    assert int(res.selected.sum()) == 8              # only 8 online
+
+
+def test_frequency_balancing_rotates_selection():
+    """Devices over the frequency threshold lose priority (paper's bias
+    mitigation): a high-count dependable device ranks below a fresh one."""
+    b = _belief(jnp.array([0.9, 0.85]))
+    q = jnp.array([50, 1])
+    P = priority(b, q, 5.0, sigma=0.5)
+    assert float(P[1]) > float(P[0])
+
+
+def test_epsilon_decay_floor():
+    e = jnp.float32(0.9)
+    for _ in range(200):
+        e = decay_epsilon(e, 0.98, 0.2)
+    np.testing.assert_allclose(float(e), 0.2, atol=1e-6)
