@@ -22,7 +22,7 @@ def main() -> None:
     from benchmarks import (bench_ablation_selector, bench_beyond,
                             bench_fig1, bench_fig2, bench_fig5, bench_fig7,
                             bench_fig8, bench_fig9, bench_kernels,
-                            bench_roofline, bench_table1)
+                            bench_roofline, bench_server_step, bench_table1)
     benches = {
         "table1": bench_table1,
         "fig1": bench_fig1,
@@ -35,6 +35,7 @@ def main() -> None:
         "beyond_selection": bench_beyond,
         "kernels": bench_kernels,
         "roofline": bench_roofline,
+        "server_step": bench_server_step,
     }
     print("name,us_per_call,derived")
     failed = []

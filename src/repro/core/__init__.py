@@ -11,7 +11,10 @@ from repro.core.caching import (ClientCaches, adaptive_cache_interval,
 from repro.core.distribution import (DistributionPlan, DistributorState,
                                      init_distributor, plan_distribution,
                                      predicted_comm_cost)
-from repro.core.aggregation import (aggregation_weights, fed_aggregate,
-                                    fed_aggregate_delta)
-from repro.core.round import (FludeState, RoundPlan, init_state, plan_round,
+from repro.core.aggregation import (PackLayout, aggregation_weights,
+                                    fed_aggregate, fed_aggregate_delta,
+                                    fed_aggregate_packed, pack, pack_layout,
+                                    pack_stacked, unpack)
+from repro.core.round import (FludeState, RoundPlan, init_state,
+                              make_server_round_step, plan_round,
                               receive_quorum, update_after_round)

@@ -7,10 +7,14 @@ discounting down-weights updates that started from stale cached models
 
 ``fed_aggregate`` operates on leading-axis-stacked updates (N, ...) —
 this is the hot-spot the ``repro.kernels.fed_agg`` Pallas kernel tiles.
+The *packed* path (``pack_layout`` / ``fed_aggregate_packed``) flattens the
+whole stacked pytree into one (C, D) buffer so the entire model aggregates
+in a single kernel launch instead of one per leaf.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+import dataclasses
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +60,114 @@ def fed_aggregate(global_params: Any, client_params: Any,
         return jnp.where(any_received, avg.astype(g.dtype), g)
 
     return jax.tree.map(agg, global_params, client_params)
+
+
+# ---------------------------------------------------------------------------
+# Packed aggregation: whole-pytree single-buffer path
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PackLayout:
+    """Static layout descriptor for flattening a param pytree to one row.
+
+    Built once from an *unstacked* template (the global model); reused every
+    round, so pack/unpack are pure reshape/concat/slice ops that fuse into
+    the surrounding jit.  The packed buffer is always fp32 (aggregation
+    accumulates in fp32; leaves cast back to their own dtype on unpack).
+    """
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    sizes: Tuple[int, ...]
+    offsets: Tuple[int, ...]
+    dim: int                     # D — total packed element count
+
+
+def _prod(shape) -> int:
+    out = 1
+    for d in shape:
+        out *= int(d)
+    return out
+
+
+def pack_layout(template_params: Any) -> PackLayout:
+    leaves, treedef = jax.tree.flatten(template_params)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(l.dtype for l in leaves)
+    sizes = tuple(_prod(s) for s in shapes)
+    offsets, off = [], 0
+    for n in sizes:
+        offsets.append(off)
+        off += n
+    return PackLayout(treedef, shapes, dtypes, sizes, tuple(offsets), off)
+
+
+def _check_layout(tree: Any, layout: PackLayout, lead: int) -> list:
+    """Leaves in layout order, with structure/shape validated — a mismatched
+    tree would otherwise pack into wrong offsets and corrupt silently."""
+    leaves, treedef = jax.tree.flatten(tree)
+    if treedef != layout.treedef:
+        raise ValueError(f"pytree structure does not match pack layout: "
+                         f"{treedef} vs {layout.treedef}")
+    for l, shape in zip(leaves, layout.shapes):
+        if tuple(l.shape[lead:]) != shape:
+            raise ValueError(f"leaf shape {l.shape} does not match "
+                             f"layout entry {shape}")
+    return leaves
+
+
+def pack(params: Any, layout: PackLayout) -> jax.Array:
+    """Unstacked pytree -> (D,) fp32 vector."""
+    leaves = _check_layout(params, layout, lead=0)
+    return jnp.concatenate(
+        [l.reshape(-1).astype(jnp.float32) for l in leaves])
+
+
+def pack_stacked(client_params: Any, layout: PackLayout) -> jax.Array:
+    """Stacked pytree (leaves (C, ...)) -> (C, D) fp32 buffer."""
+    leaves = _check_layout(client_params, layout, lead=1)
+    C = leaves[0].shape[0]
+    return jnp.concatenate(
+        [l.reshape(C, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+
+def unpack(vec: jax.Array, layout: PackLayout) -> Any:
+    """(D,) vector -> pytree with the template's shapes and dtypes."""
+    leaves = [
+        jax.lax.slice(vec, (off,), (off + n,)).reshape(shape).astype(dt)
+        for off, n, shape, dt in zip(layout.offsets, layout.sizes,
+                                     layout.shapes, layout.dtypes)
+    ]
+    return jax.tree.unflatten(layout.treedef, leaves)
+
+
+def fed_aggregate_packed(global_params: Any, client_params: Any,
+                         weights: jax.Array,
+                         layout: Optional[PackLayout] = None, *,
+                         impl: str = "xla", block_c: int = 8,
+                         block_d: int = 2048) -> Any:
+    """Weighted average over the whole pytree in ONE aggregation call.
+
+    Semantically identical to ``fed_aggregate(..., kernel=None)``: weights
+    are normalized by their sum, and when nobody reported (Σw == 0) the
+    previous global model passes through unchanged.
+
+    impl: "xla" (einsum on the packed buffer), "pallas" (TPU kernel), or
+    "pallas_interpret" (kernel in interpret mode — CPU CI).
+    """
+    from repro.kernels.fed_agg.ops import fed_agg_packed
+
+    if layout is None:
+        layout = pack_layout(global_params)
+    buf = pack_stacked(client_params, layout)                # (C, D) fp32
+    total = jnp.maximum(weights.sum(), 1e-30)
+    agg = fed_agg_packed(buf, (weights / total).astype(jnp.float32),
+                         impl=impl, block_c=block_c, block_d=block_d)
+    any_received = weights.sum() > 0
+    # empty-round gate per leaf — avoids packing the global model just to
+    # serve the nobody-reported fallback
+    return jax.tree.map(lambda avg, g: jnp.where(any_received, avg, g),
+                        unpack(agg, layout), global_params)
 
 
 def fed_aggregate_delta(global_params: Any, client_params: Any,

@@ -6,6 +6,11 @@ Algorithm-1 selection, staleness-aware distribution, predicted comm cost.
 updates (Eq. 1), participation counters (Eq. 3 numerator), U/V membership,
 ε decay.  Both are pure jnp over fixed-shape fleet arrays.
 
+``make_server_round_step`` builds the fused per-round server step: weight
+computation (incl. staleness discount), packed single-kernel aggregation,
+and cache write/clear in ONE jitted call — the per-round hot path (§4.3)
+stays on device with no per-leaf dispatch or host round-trips.
+
 Round *termination* (lines 13–16: first |S|·R̄ uploads or deadline T) is a
 wall-clock matter and lives in ``repro.fl.simulator``/the launcher, which
 call ``receive_quorum`` below for the cutoff count.
@@ -18,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
+from repro.core import aggregation as AGG
 from repro.core import caching as C
 from repro.core import distribution as D
 from repro.core import selection as SEL
@@ -106,6 +112,65 @@ def plan_round(state: FludeState, caches: C.ClientCaches,
         plan = _plan_once(state, caches, online, X, cfg, rng,
                           explore_hints)
     return plan
+
+
+def make_server_round_step(template_params, *, local_steps: int,
+                           agg_impl: str = "xla",
+                           staleness_discount: float = 1.0,
+                           uses_cache: bool = True,
+                           block_c: int = 8, block_d: int = 2048):
+    """Build the fused per-round server step (one jit, zero host syncs).
+
+    The returned callable runs everything the server does between "uploads
+    arrived" and "next round plans": aggregation weights (sample-count ×
+    staleness discount for resumed bases, §4.3), the packed whole-model
+    weighted aggregation, and C3 cache bookkeeping (write failed devices'
+    progress, clear received slots).
+
+    template_params: the *unstacked* global model pytree — fixes the packed
+    (C, D) layout once.  ``uses_cache=False`` policies get an identity
+    cache path (compiled out).
+    """
+    layout = AGG.pack_layout(template_params)
+
+    @jax.jit
+    def server_round_step(global_params, caches: C.ClientCaches,
+                          final_params, cache_params, cached_steps,
+                          selected, fail, received, resume,
+                          n_samples, extra_weights, rnd):
+        """-> (new_global_params, new_caches).
+
+        final_params / cache_params: stacked (N, ...) trainer outputs.
+        selected/fail/received/resume: (N,) bool round masks.
+        extra_weights: (N,) policy weight multiplier (ones if unused).
+        rnd: scalar int32 — current round index.
+        """
+        rnd = jnp.asarray(rnd, jnp.int32)
+        stamp = caches.round_stamp
+        # staleness of the BASE model each update was trained from
+        base_stale = jnp.where(resume & (stamp >= 0),
+                               jnp.maximum(rnd - stamp, 0),
+                               0).astype(jnp.float32)
+        w = AGG.aggregation_weights(
+            received, n_samples=n_samples, staleness=base_stale,
+            staleness_discount=staleness_discount) * extra_weights
+        new_global = AGG.fed_aggregate_packed(
+            global_params, final_params, w, layout, impl=agg_impl,
+            block_c=block_c, block_d=block_d)
+        if uses_cache:
+            prior_steps = jnp.round(
+                caches.progress * local_steps).astype(jnp.int32)
+            total_cached = jnp.where(resume, prior_steps, 0) + cached_steps
+            write = selected & fail & (total_cached > 0)
+            base_round = jnp.where(resume & (stamp >= 0), stamp, rnd)
+            caches = C.write_cache(
+                caches, write, cache_params,
+                (total_cached / max(local_steps, 1)).astype(jnp.float32),
+                base_round)
+            caches = C.clear_cache(caches, received)
+        return new_global, caches
+
+    return server_round_step
 
 
 def receive_quorum(plan: RoundPlan) -> jax.Array:

@@ -62,9 +62,15 @@ def make_train_step(model: Model, train_cfg: TrainConfig, n_silos: int,
         ce = metrics["ce_per_example"]                      # (B,)
         B = ce.shape[0]
         per_silo = B // n_silos
-        w = jnp.repeat(silo_weights, per_silo)              # (B,)
-        denom = jax.lax.stop_gradient(jnp.maximum(w.sum(), 1e-9))
-        wl = (ce * w).sum() / denom
+        # silo-major fp32 reduction: sum each silo's examples first, then
+        # weight — the partial-sum order then matches the data-sharded
+        # program (silo blocks = shard blocks), so sharded and
+        # single-device steps reduce in the same order
+        per = ce.astype(jnp.float32).reshape(n_silos, per_silo).sum(1)
+        w = silo_weights.astype(jnp.float32)
+        denom = jax.lax.stop_gradient(
+            jnp.maximum(w.sum() * per_silo, 1e-9))
+        wl = (per * w).sum() / denom
         aux = metrics.get("aux", 0.0)
         return wl + (aux if isinstance(aux, float) else aux), ce.mean()
 

@@ -38,15 +38,20 @@ def make_trainer(sim_cfg: SimConfig, data: FederatedClassification):
     grad_fn = jax.vmap(jax.value_and_grad(CLF.clf_loss))
 
     @jax.jit
-    def train_all(start_params, steps_needed, stop_step, cache_every):
-        """All-fleet masked local training.
+    def train_all(global_params, caches, resume, steps_needed, stop_step,
+                  cache_every):
+        """All-fleet masked local training (incl. fused resume selection).
 
-        start_params: stacked (N, ...) per-client model states.
+        global_params: unstacked global model; each client starts from it
+                       unless ``resume`` picks its cached local state.
+        caches:       core.ClientCaches (stacked (N, ...) params).
+        resume:       (N,) bool — train from local cache (C3/C4).
         steps_needed: (N,) steps each device must run this round (0 = idle).
         stop_step:    (N,) interruption step (>= steps_needed: no failure).
         cache_every:  (N,) cache interval in steps (C3 adaptive frequency).
         Returns (final_params, cache_params, cached_steps, mean_loss).
         """
+        start_params = core.resume_params(caches, global_params, resume)
         zero_cache = start_params
         loss0 = jnp.zeros((x_all.shape[0],), jnp.float32)
 
@@ -359,6 +364,13 @@ def run_fl(policy_name: str, data: FederatedClassification,
     cum_comm = 0.0
     cum_time = 0.0
     acc_fn = jax.jit(CLF.clf_accuracy)
+    ones_w = jnp.ones((fl_cfg.num_clients,), jnp.float32)
+    # fused server step: weights + packed aggregation + cache bookkeeping
+    server_step = core.make_server_round_step(
+        global_params, local_steps=sim_cfg.local_steps,
+        agg_impl=fl_cfg.agg_impl, staleness_discount=1.0,
+        uses_cache=policy.uses_cache, block_c=fl_cfg.agg_block_c,
+        block_d=fl_cfg.agg_block_d)
 
     for rnd in range(sim_cfg.rounds):
         if time_budget is not None and cum_time >= time_budget:
@@ -387,11 +399,11 @@ def run_fl(policy_name: str, data: FederatedClassification,
         fail &= selected
         stop = np.where(fail, fleet.failure_step(steps_needed), BIG)
 
-        # local training start state: fresh global vs cached local
-        start = core.resume_params(caches, global_params,
-                                   jnp.asarray(resume))
+        # local training; the start state (fresh global vs cached local)
+        # is selected on device inside the jitted trainer
         final, cache_p, cached_steps, losses = trainer(
-            start, jnp.asarray(steps_needed), jnp.asarray(stop),
+            global_params, caches, jnp.asarray(resume),
+            jnp.asarray(steps_needed), jnp.asarray(stop),
             jnp.asarray(cache_every_np))
 
         # timing + round termination (Algorithm 2 lines 13–16)
@@ -411,36 +423,19 @@ def run_fl(policy_name: str, data: FederatedClassification,
         received = success & (times <= t_cut)
         duration = t_cut if np.isfinite(t_cut) else sim_cfg.round_deadline
 
-        # aggregation (masked weighted FedAvg; optional policy weights).
-        # Updates whose BASE model is stale are discounted (paper §4.3 /
-        # refs [28–32]: stale models introduce error) — applies uniformly
-        # to every policy that resumes from old state (FLUDE caches, SAFA
-        # lag-tolerant clients).
-        stamp0 = np.asarray(caches.round_stamp)
-        base_stale = np.where(resume & (stamp0 >= 0),
-                              np.maximum(rnd - stamp0, 0), 0)
-        w = core.aggregation_weights(jnp.asarray(received),
-                                     n_samples=n_samples,
-                                     staleness=jnp.asarray(
-                                         base_stale, jnp.float32),
-                                     staleness_discount=1.0)
-        if "agg_weights" in plan:
-            w = w * jnp.asarray(plan["agg_weights"], jnp.float32)
-        global_params = core.fed_aggregate(global_params, final, w)
-
-        # cache bookkeeping (C3): failed devices keep their progress
-        if policy.uses_cache:
-            total_cached = np.where(resume, prior_steps, 0) \
-                + np.asarray(cached_steps)
-            write = selected & fail & (total_cached > 0)
-            stamp = np.asarray(caches.round_stamp)
-            base_round = np.where(resume & (stamp >= 0), stamp, rnd)
-            caches = core.write_cache(
-                caches, jnp.asarray(write), cache_p,
-                jnp.asarray(total_cached / max(sim_cfg.local_steps, 1),
-                            ).astype(jnp.float32),
-                jnp.asarray(base_round, jnp.int32))
-            caches = core.clear_cache(caches, jnp.asarray(received))
+        # fused server step (§4.3 hot path): aggregation weights with the
+        # staleness discount for stale BASE models (refs [28–32]; applies
+        # uniformly to every policy that resumes from old state — FLUDE
+        # caches, SAFA lag-tolerant clients), packed whole-model weighted
+        # aggregation, and C3 cache write/clear — one jitted call, params
+        # never leave the device.
+        extra_w = jnp.asarray(plan["agg_weights"], jnp.float32) \
+            if "agg_weights" in plan else ones_w
+        global_params, caches = server_step(
+            global_params, caches, final, cache_p, cached_steps,
+            jnp.asarray(selected), jnp.asarray(fail),
+            jnp.asarray(received), jnp.asarray(resume),
+            n_samples, extra_w, rnd)
 
         policy.observe(plan, received, np.asarray(losses), times)
 

@@ -28,3 +28,21 @@ def fed_agg_tree(updates_tree: Any, weights: jnp.ndarray,
                  **kw) -> Any:
     """Aggregate every leaf of a stacked client-update pytree."""
     return jax.tree.map(lambda u: fed_agg(u, weights, **kw), updates_tree)
+
+
+def fed_agg_packed(updates: jnp.ndarray, weights: jnp.ndarray, *,
+                   impl: str = "xla", block_c: int = 8,
+                   block_d: int = 2048) -> jnp.ndarray:
+    """Σ_c w_c · u_c over an already-packed (C, D) buffer -> (D,).
+
+    The packed buffer holds ALL leaves of a stacked client pytree
+    (``repro.core.aggregation.pack_stacked``), so one call aggregates the
+    whole model.  impl: "xla" | "pallas" | "pallas_interpret".
+    """
+    if impl == "xla":
+        return fed_agg_ref(updates, weights)
+    if impl not in ("pallas", "pallas_interpret"):
+        raise ValueError(f"unknown fed_agg impl: {impl!r}")
+    return fed_agg_pallas(updates, weights, block_c=block_c,
+                          block_d=block_d,
+                          interpret=(impl == "pallas_interpret"))

@@ -38,7 +38,7 @@ from repro.models import ExecConfig, build_model, input_specs, \
 from repro.models import layers as PL
 from repro.optim.optimizers import make_optimizer
 from repro.roofline.analysis import build_roofline, model_flops
-from repro.roofline.hlo import analyze_hlo_text
+from repro.roofline.hlo import analyze_hlo_text, compiled_cost_analysis
 from repro.sharding import partitioning as SP
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -142,10 +142,7 @@ def lower_one(arch: str, shape_name: str, mesh_name: str,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    try:
-        ca = compiled.cost_analysis() or {}
-    except Exception:
-        ca = {}
+    ca = compiled_cost_analysis(compiled)
     hlo_text = compiled.as_text()
     cost = analyze_hlo_text(hlo_text)
 

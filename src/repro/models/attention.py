@@ -46,17 +46,22 @@ def gqa_spec(cfg, layered: Optional[int] = None):
     hd = cfg.resolved_head_dim
     dt = L.cfg_dtype(cfg.param_dtype)
 
-    def w(shape, axes, init="normal", scale=1.0):
+    def w(shape, axes, init="normal", scale=1.0, fan_in=None):
         if layered is not None:
             shape = (layered,) + shape
             axes = ("layers",) + axes
-        return L.ParamSpec(shape, dt, axes, init, scale)
+        return L.ParamSpec(shape, dt, axes, init, scale, fan_in=fan_in)
 
+    # explicit fan_in: the shape heuristic reads dim -2, which for these
+    # multi-dim projections is a head axis, not the contraction size —
+    # mis-scaled init saturates the score softmax
     p = {
-        "wq": w((d, hk, g, hd), ("embed", "kv_heads", "q_group", "head_dim")),
-        "wk": w((d, hk, hd), ("embed", "kv_heads", "head_dim")),
-        "wv": w((d, hk, hd), ("embed", "kv_heads", "head_dim")),
-        "wo": w((hk, g, hd, d), ("kv_heads", "q_group", "head_dim", "embed")),
+        "wq": w((d, hk, g, hd), ("embed", "kv_heads", "q_group", "head_dim"),
+                fan_in=d),
+        "wk": w((d, hk, hd), ("embed", "kv_heads", "head_dim"), fan_in=d),
+        "wv": w((d, hk, hd), ("embed", "kv_heads", "head_dim"), fan_in=d),
+        "wo": w((hk, g, hd, d), ("kv_heads", "q_group", "head_dim", "embed"),
+                fan_in=hk * g * hd),
     }
     if cfg.qkv_bias:
         p["bq"] = w((hk, g, hd), ("kv_heads", "q_group", "head_dim"), "zeros")
@@ -70,27 +75,29 @@ def mla_spec(cfg, layered: Optional[int] = None):
     d, h = cfg.d_model, cfg.num_heads
     dt = L.cfg_dtype(cfg.param_dtype)
 
-    def w(shape, axes):
+    def w(shape, axes, init="normal", fan_in=None):
         if layered is not None:
             shape = (layered,) + shape
             axes = ("layers",) + axes
-        return L.ParamSpec(shape, dt, axes, "normal", 1.0)
+        return L.ParamSpec(shape, dt, axes, init, 1.0, fan_in=fan_in)
 
     qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
     return {
         # query low-rank path
         "w_dq": w((d, m.q_lora_rank), ("embed", "lora")),
-        "q_norm": w((m.q_lora_rank,), ("lora",)),
-        "w_uq": w((m.q_lora_rank, h, qk_dim), ("lora", "heads", "head_dim")),
+        "q_norm": w((m.q_lora_rank,), ("lora",), "ones"),
+        "w_uq": w((m.q_lora_rank, h, qk_dim), ("lora", "heads", "head_dim"),
+                  fan_in=m.q_lora_rank),
         # kv low-rank path (+ shared rope key)
         "w_dkv": w((d, m.kv_lora_rank + m.qk_rope_head_dim),
                    ("embed", "lora")),
-        "kv_norm": w((m.kv_lora_rank,), ("lora",)),
+        "kv_norm": w((m.kv_lora_rank,), ("lora",), "ones"),
         "w_uk": w((m.kv_lora_rank, h, m.qk_nope_head_dim),
-                  ("lora", "heads", "head_dim")),
+                  ("lora", "heads", "head_dim"), fan_in=m.kv_lora_rank),
         "w_uv": w((m.kv_lora_rank, h, m.v_head_dim),
-                  ("lora", "heads", "head_dim")),
-        "wo": w((h, m.v_head_dim, d), ("heads", "head_dim", "embed")),
+                  ("lora", "heads", "head_dim"), fan_in=m.kv_lora_rank),
+        "wo": w((h, m.v_head_dim, d), ("heads", "head_dim", "embed"),
+                fan_in=h * m.v_head_dim),
     }
 
 

@@ -26,6 +26,8 @@ class ParamSpec:
     axes: Tuple[Optional[str], ...]   # logical axis names, len == len(shape)
     init: str = "normal"              # normal | zeros | ones | embed
     scale: float = 1.0                # multiplier on the default fan-in scale
+    fan_in: Optional[int] = None      # explicit fan-in (contraction size);
+                                      # None = shape heuristic (2D/stacked-3D)
 
     def __post_init__(self):
         assert len(self.axes) == len(self.shape), (self.shape, self.axes)
@@ -55,9 +57,13 @@ def _init_one(spec: ParamSpec, key) -> jax.Array:
         return (jax.random.normal(key, spec.shape, jnp.float32) * std
                 ).astype(spec.dtype)
     # fan-in scaled normal
-    fan_in = spec.shape[0] if len(spec.shape) >= 2 else max(spec.shape[-1], 1)
-    if len(spec.shape) >= 3:       # stacked/layered weights: fan-in is dim -2
-        fan_in = spec.shape[-2]
+    if spec.fan_in is not None:
+        fan_in = spec.fan_in
+    else:
+        fan_in = spec.shape[0] if len(spec.shape) >= 2 \
+            else max(spec.shape[-1], 1)
+        if len(spec.shape) >= 3:   # stacked/layered weights: fan-in is dim -2
+            fan_in = spec.shape[-2]
     std = spec.scale / np.sqrt(max(fan_in, 1))
     return (jax.random.normal(key, spec.shape, jnp.float32) * std
             ).astype(spec.dtype)

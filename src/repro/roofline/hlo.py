@@ -371,6 +371,21 @@ def _dot_flops(ins: Instr, comp: Computation) -> float:
     return 2.0 * ins.out_elems * contracting
 
 
+def compiled_cost_analysis(compiled) -> Dict[str, float]:
+    """Version-compat shim for ``jax.stages.Compiled.cost_analysis()``.
+
+    Older JAX returns a single dict; newer JAX returns a *list* with one
+    dict per executable module.  Normalizes both to a plain dict (first
+    module — jit programs here compile to exactly one)."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
 def analyze_hlo_text(text: str) -> HloCost:
     comps = parse_hlo(text)
     if "__entry__" not in comps:

@@ -111,17 +111,20 @@ from repro.fl.classifier import init_classifier
 import repro.core as core
 params = init_classifier(jax.random.key(0), dim=data.x.shape[-1])
 stacked = jax.tree.map(lambda a: jnp.broadcast_to(a, (32,) + a.shape), params)
+caches = core.init_caches(params, 32)._replace(params=stacked)
+resume = jnp.ones((32,), bool)     # start from the stacked cached states
 steps = jnp.full((32,), 4, jnp.int32)
 stop = jnp.full((32,), 1 << 20, jnp.int32)
 cache_every = jnp.full((32,), 2, jnp.int32)
 
-ref = trainer(stacked, steps, stop, cache_every)
+ref = trainer(params, caches, resume, steps, stop, cache_every)
 
 mesh = jax.make_mesh((8,), ("clients",))
 shard = NamedSharding(mesh, P("clients"))
-stacked_sh = jax.device_put(stacked, jax.tree.map(lambda _: shard, stacked))
+caches_sh = jax.device_put(caches, jax.tree.map(lambda _: shard, caches))
 with mesh:
-    got = trainer(stacked_sh, jax.device_put(steps, shard),
+    got = trainer(params, caches_sh, jax.device_put(resume, shard),
+                  jax.device_put(steps, shard),
                   jax.device_put(stop, shard),
                   jax.device_put(cache_every, shard))
 

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.roofline.analysis import Roofline, build_roofline, model_flops
-from repro.roofline.hlo import analyze_hlo_text
+from repro.roofline.hlo import analyze_hlo_text, compiled_cost_analysis
 
 
 def _compile(fn, *args):
@@ -33,7 +33,7 @@ def test_scan_trip_count_multiplied():
     expect = 10 * 2 * 32 * 128 * 128
     assert abs(cost.flops - expect) / expect < 0.05
     # XLA's own cost_analysis does NOT multiply (documents why we parse)
-    xla = _compile(g, a, ws).cost_analysis()["flops"]
+    xla = compiled_cost_analysis(_compile(g, a, ws))["flops"]
     assert xla < cost.flops / 5
 
 
