@@ -1,55 +1,47 @@
-"""Table 2 / Fig. 6: device-selector ablation (FLUDE w/o selector)."""
-import dataclasses
+"""Table 2 / Fig. 6: device-selector ablation (FLUDE w/o selector).
+
+The ablated variant is a registered policy — exactly the plug-in path a
+new scenario policy takes; no runner monkey-patching.
+"""
+import numpy as np
 
 from benchmarks.common import emit, standard_setup, timed_run
-from repro.fl import runner as R
+from repro.fl import RoundPlan, register_policy
+from repro.fl.policies import FludePolicy
 
 
-class FludeNoSelector(R.FludePolicy):
+@register_policy("flude_no_selector")
+class FludeNoSelector(FludePolicy):
     """FLUDE with the device selector disabled: random selection, but
     caching + staleness-aware distribution still on."""
-    name = "flude_no_selector"
 
-    def plan(self, rnd, online, caches, rng):
-        import numpy as np
-        plan = super().plan(rnd, online, caches, rng)
+    def plan(self, state, obs, rng):
+        state, plan = super().plan(state, obs, rng)
         N = self.fl_cfg.num_clients
-        rs = np.random.RandomState(1000 + rnd)
+        rs = np.random.RandomState(1000 + obs.rnd)
         sel = np.zeros(N, bool)
-        idx = np.flatnonzero(online)
+        idx = np.flatnonzero(obs.online)
         take = min(self.fl_cfg.clients_per_round, idx.size)
         sel[rs.choice(idx, take, replace=False)] = True
         # rebuild distribution decision for the random selection
-        stamp = caches.round_stamp
-        has = np.asarray(stamp) >= 0
-        stale = np.where(has, rnd - np.asarray(stamp), 1 << 20)
+        stamp = np.asarray(obs.caches.round_stamp)
+        has = stamp >= 0
+        stale = np.where(has, obs.rnd - stamp, 1 << 20)
         resume = sel & has & (stale <= float(
-            self.state.distributor.w_threshold))
-        # SAME quorum rule as native FLUDE (floor(|S|·R̄)) so the ablation
-        # isolates the selector, not the round-termination rule
-        r_bar = float(plan["quorum"]) / max(plan["selected"].sum(), 1)
-        return {"selected": sel, "distribute": sel & ~resume,
-                "resume": resume,
-                "quorum": max(np.floor(sel.sum() * r_bar), 1.0)}
+            state.core.distributor.w_threshold))
+        # SAME quorum rule as native FLUDE (floor(|S|·R̄), R̄ straight from
+        # the FludePlan) so the ablation isolates the selector, not the
+        # round-termination rule
+        r_bar = float(state.last.avg_dependability)
+        quorum = max(np.floor(sel.sum() * r_bar), 1.0) if take else 0.0
+        return state, RoundPlan.create(sel, sel & ~resume, resume,
+                                       min(quorum, float(sel.sum())))
 
 
 def run():
     sim, fl, data = standard_setup()
     h_full, w1 = timed_run("flude", data, sim, fl)
-
-    # monkey-register the ablated policy
-    orig = R.make_policy
-
-    def patched(name, sim_cfg, fl_cfg, fleet):
-        if name == "flude_no_selector":
-            return FludeNoSelector(sim_cfg, fl_cfg)
-        return orig(name, sim_cfg, fl_cfg, fleet)
-
-    R.make_policy = patched
-    try:
-        h_abl, w2 = timed_run("flude_no_selector", data, sim, fl)
-    finally:
-        R.make_policy = orig
+    h_abl, w2 = timed_run("flude_no_selector", data, sim, fl)
 
     # near-asymptote target: early rounds are policy-agnostic
     target = min(h_full.acc[-1], h_abl.acc[-1]) * 0.995

@@ -1,0 +1,191 @@
+"""Old host-side server loop vs device-resident FleetEngine, rounds/sec.
+
+The baseline reconstructs the pre-fusion runner: every round it pulls the
+stacked trainer outputs to host, runs the server step in numpy (weights
+incl. staleness discount, leaf-wise weighted aggregation, C3 cache
+bookkeeping), pushes the new global model + caches back to device, and
+evaluates test accuracy — the host-side loop the typed FleetEngine
+replaced.  The engine keeps params and caches device-resident across
+rounds and syncs to host only at eval boundaries.
+
+Each loop runs with its own default eval cadence (host loop: every
+round, like the old runner; engine: eval boundaries only) — the cadence
+difference is part of what the device-resident design buys and is
+included in the measured speedup deliberately.  Numerical equivalence of
+the two paths is NOT asserted here (the two runs train for different
+cumulative rounds); that is covered by the golden-file tests in
+tests/test_policy_api.py.
+
+Fleet sizes N ∈ {256, 1024, 4096}; records results/benchmarks/
+BENCH_engine.json.
+"""
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import QUICK, RESULTS, emit
+from repro import core
+from repro.configs.base import FLConfig
+from repro.data.synthetic import federated_classification
+from repro.fl import Fleet, FleetEngine, SimConfig, make_trainer
+from repro.fl import classifier as CLF
+
+BIG = 1 << 20
+SIZES = (64, 256) if QUICK else (256, 1024, 4096)
+ROUNDS = 3 if QUICK else 5
+WARMUP = 1
+POLICY = "flude"
+
+
+def _setup(n):
+    sim = SimConfig(num_clients=n, rounds=WARMUP + ROUNDS, seed=7,
+                    local_steps=2, batch_size=16)
+    fl = FLConfig(num_clients=n, clients_per_round=max(n // 8, 8))
+    data = federated_classification(n, seed=8, n_per_client=16)
+    return sim, fl, data
+
+
+def host_loop(data, sim, fl, n_rounds):
+    """Per-round host round-trip of the server step (the old loop).
+
+    FLUDE planning/bookkeeping run eagerly (op-by-op, as the dict-era
+    runner did) rather than through the policy's jitted plan path."""
+    N = fl.num_clients
+    fleet = Fleet(sim)
+    hints = jnp.asarray(fleet.battery * fleet.stability, jnp.float32)
+    fstate = core.init_state(fl)
+    trainer = make_trainer(sim, data)
+    acc_fn = jax.jit(CLF.clf_accuracy)
+    params = CLF.init_classifier(jax.random.key(sim.seed + 1),
+                                 dim=data.x.shape[-1],
+                                 num_classes=data.num_classes)
+    caches = core.init_caches(params, N)
+    cache_every = jnp.asarray(np.clip(np.round(core.adaptive_cache_interval(
+        2.0, fleet.battery, fleet.stability)), 1, 4).astype(np.int32))
+    n_samples = np.full(N, data.x.shape[1], np.float32)
+    test_x = jnp.asarray(data.test_x)
+    test_y = jnp.asarray(data.test_y)
+    rng = jax.random.key(sim.seed)
+    acc = float("nan")
+    t_after_warmup = None
+    for rnd in range(n_rounds):
+        if rnd == WARMUP:
+            t_after_warmup = time.time()
+        rng, k_sel = jax.random.split(rng)
+        online = fleet.online_mask()
+        p = core.plan_round(fstate, caches, jnp.asarray(online), fl, k_sel,
+                            explore_hints=hints)
+        selected = np.asarray(p.selected)
+        distribute = np.asarray(p.distribute)
+        resume = np.asarray(p.resume)
+
+        progress_h = np.asarray(caches.progress)
+        stamp_h = np.asarray(caches.round_stamp)
+        prior_steps = np.round(progress_h * sim.local_steps).astype(np.int32)
+        steps_needed = np.where(resume,
+                                np.maximum(sim.local_steps - prior_steps, 1),
+                                sim.local_steps).astype(np.int32)
+        steps_needed = np.where(selected, steps_needed, 0)
+        fail = fleet.failure_draw(steps_needed / max(sim.local_steps, 1))
+        fail &= selected
+        stop = np.where(fail, fleet.failure_step(steps_needed), BIG)
+
+        final, cache_p, cached_steps, _ = trainer(
+            params, caches, jnp.asarray(resume), jnp.asarray(steps_needed),
+            jnp.asarray(stop), cache_every)
+
+        success = selected & ~fail & (steps_needed > 0)
+        completed = np.minimum(steps_needed, stop)
+        times = fleet.round_times(steps_needed, distribute, completed,
+                                  success)
+        quorum = int(np.ceil(min(float(p.quorum), float(selected.sum()))))
+        finite = np.sort(times[np.isfinite(times)])
+        if finite.size >= quorum and quorum > 0:
+            t_cut = min(finite[quorum - 1], sim.round_deadline)
+        else:
+            t_cut = sim.round_deadline
+        received = success & (times <= t_cut)
+        fstate = core.update_after_round(fstate, p, jnp.asarray(received),
+                                         fl)
+
+        # --- host-side server step: pull, numpy aggregate, push --------
+        final_h = jax.device_get(final)
+        cache_h = jax.device_get(cache_p)
+        cached_h = np.asarray(cached_steps)
+        base_stale = np.where(resume & (stamp_h >= 0),
+                              np.maximum(rnd - stamp_h, 0), 0)
+        w = received * n_samples / (1.0 + base_stale)
+        total = max(w.sum(), 1e-30)
+        params_h = jax.device_get(params)
+        if w.sum() > 0:
+            wv = (w / total).astype(np.float32)
+            params_h = jax.tree.map(
+                lambda c, g: (c.astype(np.float32)
+                              * wv.reshape((-1,) + (1,) * (c.ndim - 1))
+                              ).sum(0).astype(g.dtype), final_h, params_h)
+        total_cached = np.where(resume, prior_steps, 0) + cached_h
+        write = selected & fail & (total_cached > 0)
+        base_round = np.where(resume & (stamp_h >= 0), stamp_h, rnd)
+        cache_leaves = jax.tree.map(
+            lambda old, new: np.where(
+                write.reshape((-1,) + (1,) * (old.ndim - 1)), new, old),
+            jax.device_get(caches.params), cache_h)
+        progress_h = np.where(write, total_cached / max(sim.local_steps, 1),
+                              progress_h)
+        stamp_h = np.where(write, base_round, stamp_h).astype(np.int32)
+        progress_h = np.where(received, 0.0, progress_h).astype(np.float32)
+        stamp_h = np.where(received, -1, stamp_h).astype(np.int32)
+        params = jax.device_put(params_h)
+        caches = core.ClientCaches(
+            jax.tree.map(jnp.asarray, cache_leaves),
+            jnp.asarray(progress_h), jnp.asarray(stamp_h))
+        # per-round eval (the old loop's default)
+        acc = float(acc_fn(params, test_x, test_y))
+    return acc, time.time() - t_after_warmup
+
+
+def engine_loop(data, sim, fl, n_rounds):
+    engine = FleetEngine(data, sim, fl)
+    engine.run(POLICY, rounds=WARMUP, diagnostics=False)    # jit warmup
+    t0 = time.time()
+    h = engine.run(POLICY, rounds=n_rounds - WARMUP,
+                   eval_every=n_rounds, diagnostics=False)
+    return h.acc[-1], time.time() - t0
+
+
+def run():
+    record = {"policy": POLICY, "rounds": ROUNDS,
+              "note": "host loop evals every round (old default), engine "
+                      "evals at boundaries; accs are sanity values, not "
+                      "an equivalence check (see tests/test_policy_api.py)",
+              "sizes": {}}
+    for n in SIZES:
+        sim, fl, data = _setup(n)
+        acc_e, dt_e = engine_loop(data, sim, fl, WARMUP + ROUNDS)
+        acc_h, dt_h = host_loop(data, sim, fl, WARMUP + ROUNDS)
+        rps_e = ROUNDS / dt_e
+        rps_h = ROUNDS / dt_h
+        record["sizes"][str(n)] = {
+            "engine_rounds_per_sec": rps_e,
+            "host_rounds_per_sec": rps_h,
+            "speedup": rps_e / rps_h,
+            "engine_final_acc": acc_e, "host_final_acc": acc_h,
+        }
+        emit(f"engine_n{n}", dt_e * 1e6 / ROUNDS,
+             f"engine_rps={rps_e:.2f};host_rps={rps_h:.2f};"
+             f"speedup={rps_e / rps_h:.2f}x")
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "BENCH_engine.json"), "w") as f:
+        json.dump(record, f, indent=1)
+    emit("engine_summary", 0.0,
+         f"max_speedup={max(v['speedup'] for v in record['sizes'].values()):.2f}x",
+         record=None)
+    return record
+
+
+if __name__ == "__main__":
+    run()

@@ -9,7 +9,7 @@ import numpy as np
 from benchmarks.common import TIME_BUDGET, emit, standard_setup, timed_run
 from repro.configs.base import FLConfig
 from repro.data.synthetic import auc, ctr_dataset
-from repro.fl import SimConfig, run_fl
+from repro.fl import SimConfig
 from repro.fl import classifier as CLF
 
 METHODS = ["asyncfeded", "safa", "fedsea", "oort", "flude"]

@@ -14,7 +14,7 @@ import time
 
 from repro.configs.base import FLConfig
 from repro.data.synthetic import federated_classification
-from repro.fl import SimConfig, run_fl
+from repro.fl import FleetEngine, SimConfig
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
                        "benchmarks")
@@ -42,10 +42,26 @@ def standard_setup(num_clients=60, rounds=None, seed=7,
     return sim, fl, data
 
 
+_ENGINES = {}
+_ENGINE_SLOTS = 4     # bounded: a full bench sweep must not pin every
+                      # dataset + compiled trainer for the process lifetime
+
+
+def get_engine(data, sim, fl) -> FleetEngine:
+    """One FleetEngine per (task, sim, fl) setup — policies compared on
+    the same setup share the compiled trainer/server round path."""
+    key = (id(data), sim, fl)
+    if key not in _ENGINES:
+        while len(_ENGINES) >= _ENGINE_SLOTS:
+            _ENGINES.pop(next(iter(_ENGINES)))
+        _ENGINES[key] = FleetEngine(data, sim, fl)
+    return _ENGINES[key]
+
+
 def timed_run(policy, data, sim, fl, time_budget=None):
+    engine = get_engine(data, sim, fl)
     t0 = time.time()
-    h = run_fl(policy, data, sim, fl,
-               time_budget=time_budget or TIME_BUDGET)
+    h = engine.run(policy, time_budget=time_budget or TIME_BUDGET)
     return h, time.time() - t0
 
 

@@ -20,9 +20,10 @@ def main() -> None:
         os.environ["BENCH_QUICK"] = "1"
 
     from benchmarks import (bench_ablation_selector, bench_beyond,
-                            bench_fig1, bench_fig2, bench_fig5, bench_fig7,
-                            bench_fig8, bench_fig9, bench_kernels,
-                            bench_roofline, bench_server_step, bench_table1)
+                            bench_engine, bench_fig1, bench_fig2,
+                            bench_fig5, bench_fig7, bench_fig8, bench_fig9,
+                            bench_kernels, bench_roofline,
+                            bench_server_step, bench_table1)
     benches = {
         "table1": bench_table1,
         "fig1": bench_fig1,
@@ -36,6 +37,7 @@ def main() -> None:
         "kernels": bench_kernels,
         "roofline": bench_roofline,
         "server_step": bench_server_step,
+        "engine": bench_engine,
     }
     print("name,us_per_call,derived")
     failed = []

@@ -1,10 +1,13 @@
 """Quickstart: FLUDE vs random FedAvg on a 60-device undependable fleet.
 
+Builds one FleetEngine (trainer + fused server step jit once) and runs
+two registered policies through it — the paper's comparison loop.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 from repro.configs.base import FLConfig
 from repro.data.synthetic import federated_classification
-from repro.fl import SimConfig, run_fl
+from repro.fl import FleetEngine, SimConfig
 
 
 def main():
@@ -13,12 +16,13 @@ def main():
                     undep_means=(0.2, 0.4, 0.6))   # paper §5.2 groups
     fl = FLConfig(num_clients=n, clients_per_round=15)
     data = federated_classification(n, seed=1, margin=1.4, noise=1.3)
+    engine = FleetEngine(data, sim, fl)
 
     print("policy    final-acc   wall-clock   comm")
     for policy in ("flude", "random"):
-        h = run_fl(policy, data, sim, fl,
-                   progress=lambda r, a, c, t:
-                   print(f"  [{policy}] round {r:3d} acc {a:.3f}"))
+        h = engine.run(policy,
+                       progress=lambda r, a, c, t:
+                       print(f"  [{policy}] round {r:3d} acc {a:.3f}"))
         print(f"{policy:8s}  {h.acc[-1]:.4f}     "
               f"{h.wall_clock[-1]:8.0f}s   {h.comm_mb[-1]:7.0f} MB")
 

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from repro import core
 from repro.configs.base import FLConfig
 from repro.data.synthetic import federated_classification
-from repro.fl import SimConfig, run_fl
+from repro.fl import FleetEngine, SimConfig
 
 
 def main():
@@ -27,7 +27,7 @@ def main():
     for mode in ("full", "adaptive", "least"):
         fl = FLConfig(num_clients=n, clients_per_round=15,
                       distribution_mode=mode)
-        h = run_fl("flude", data, sim, fl)
+        h = FleetEngine(data, sim, fl).run("flude")
         print(f"{mode:9s}  {h.acc[-1]:.4f}     {h.comm_mb[-1]:7.0f}")
 
     print("\n== Eq. 4 threshold dynamics (isolated) ==")

@@ -5,11 +5,9 @@ vanilla FedAvg, then shows FLUDE recovering the loss at 40%.
 
     PYTHONPATH=src python examples/undependable_fleet.py
 """
-import dataclasses
-
 from repro.configs.base import FLConfig
 from repro.data.synthetic import federated_classification
-from repro.fl import SimConfig, run_fl
+from repro.fl import FleetEngine, SimConfig
 
 
 def main():
@@ -21,15 +19,16 @@ def main():
     for rate in (0.05, 0.2, 0.4, 0.6):
         sim = SimConfig(num_clients=n, rounds=30, seed=0,
                         undep_means=(rate,) * 3)
-        h = run_fl("random", data, sim, fl)
+        h = FleetEngine(data, sim, fl).run("random")
         print(f"  undependability {rate:.0%}: acc {h.acc[-1]:.4f}  "
               f"comm {h.comm_mb[-1]:6.0f} MB")
 
     print("== FLUDE at 40% undependability ==")
     sim = SimConfig(num_clients=n, rounds=30, seed=0,
                     undep_means=(0.4,) * 3)
+    engine = FleetEngine(data, sim, fl)
     for policy in ("random", "flude"):
-        h = run_fl(policy, data, sim, fl)
+        h = engine.run(policy)
         print(f"  {policy:8s}: acc {h.acc[-1]:.4f}  "
               f"comm {h.comm_mb[-1]:6.0f} MB  wall {h.wall_clock[-1]:.0f}s")
 

@@ -243,6 +243,7 @@ class FLConfig:
     base_cache_interval: float = 60.0  # seconds between cache writes
     distribution_mode: str = "adaptive"  # adaptive | full | least
     # server aggregation (§4.3 hot path): packed whole-model kernel
+    staleness_discount: float = 1.0    # per-round decay of stale-base weights
     agg_impl: str = "xla"              # xla | pallas | pallas_interpret
     agg_block_c: int = 8               # client-axis tile of the Pallas kernel
     agg_block_d: int = 2048            # packed-param-axis tile

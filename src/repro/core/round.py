@@ -42,7 +42,7 @@ class FludeState(NamedTuple):
     round: jax.Array            # scalar int32
 
 
-class RoundPlan(NamedTuple):
+class FludePlan(NamedTuple):
     selected: jax.Array         # (N,) bool — S
     distribute: jax.Array       # (N,) bool — S_distr (fresh global model)
     resume: jax.Array           # (N,) bool — train from local cache
@@ -68,7 +68,7 @@ def init_state(cfg: FLConfig) -> FludeState:
 
 def _plan_once(state: FludeState, caches: C.ClientCaches,
                online: jax.Array, X, cfg: FLConfig, rng,
-               explore_hints=None) -> RoundPlan:
+               explore_hints=None) -> FludePlan:
     sel = SEL.select_participants(
         state.belief, state.part_count, state.explored, online,
         state.total_selected, X, state.epsilon, cfg.sigma, rng,
@@ -86,14 +86,14 @@ def _plan_once(state: FludeState, caches: C.ClientCaches,
     # successes than the quorum and idle-wait the full deadline T —
     # exactly the waste Algorithm 2 is designed to avoid
     quorum = jnp.maximum(jnp.floor(sel.selected.sum() * r_bar), 1.0)
-    return RoundPlan(sel.selected, plan.distribute, plan.resume, cost,
+    return FludePlan(sel.selected, plan.distribute, plan.resume, cost,
                      quorum, r_bar, sel.priority, plan.state)
 
 
 def plan_round(state: FludeState, caches: C.ClientCaches,
                online: jax.Array, cfg: FLConfig, rng,
                max_budget_iters: int = 8,
-               explore_hints=None) -> RoundPlan:
+               explore_hints=None) -> FludePlan:
     """Algorithm 2 lines 3–11: shrink X until B_pred ≤ B_max.
 
     ``explore_hints``: optional (N,) device-status scores (battery ×
@@ -173,12 +173,12 @@ def make_server_round_step(template_params, *, local_steps: int,
     return server_round_step
 
 
-def receive_quorum(plan: RoundPlan) -> jax.Array:
+def receive_quorum(plan: FludePlan) -> jax.Array:
     """Line 15 cutoff: the round ends after ⌈|S|·R̄⌉ received uploads."""
     return plan.quorum
 
 
-def update_after_round(state: FludeState, plan: RoundPlan,
+def update_after_round(state: FludeState, plan: FludePlan,
                        received: jax.Array, cfg: FLConfig) -> FludeState:
     """Post-round bookkeeping.  received: (N,) bool — uploaded in time."""
     sel = plan.selected

@@ -1,2 +1,7 @@
 from repro.fl.simulator import Fleet, SimConfig
-from repro.fl.runner import History, run_fl, make_trainer
+from repro.fl.api import (Policy, RoundObservation, RoundPlan, RoundReport,
+                          available_policies, get_policy, make_policy,
+                          register_policy)
+from repro.fl.engine import FleetEngine, History, make_trainer
+from repro.fl import policies  # noqa: F401 — registers the built-ins
+from repro.fl.runner import run_fl

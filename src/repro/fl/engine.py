@@ -1,0 +1,333 @@
+"""FleetEngine: the device-resident FL round loop behind the typed API.
+
+The engine owns the vectorized local trainer, the fused jitted server
+round step (weights + packed aggregation + C3 cache bookkeeping) and the
+fleet simulator; policies are pure ``plan``/``observe`` transitions over
+typed ``RoundPlan``/``RoundReport`` messages (see ``repro.fl.api``).
+
+Global params and client caches stay device-resident across rounds —
+the host only sees (N,)-sized masks/metadata each round, plus the test
+accuracy at eval/progress boundaries (``eval_every``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.configs.base import FLConfig
+from repro.data.synthetic import FederatedClassification
+from repro.fl import classifier as CLF
+from repro.fl.api import (Policy, RoundObservation, RoundPlan, RoundReport,
+                          make_policy)
+from repro.fl import policies as _builtin_policies  # noqa: F401  (registers)
+from repro.fl.simulator import Fleet, SimConfig
+
+BIG = 1 << 20
+
+
+# ---------------------------------------------------------------------------
+# Vectorized local trainer
+# ---------------------------------------------------------------------------
+
+def make_trainer(sim_cfg: SimConfig, data: FederatedClassification):
+    x_all = jnp.asarray(data.x)            # (N, n, d)
+    y_all = jnp.asarray(data.y)            # (N, n)
+    n = x_all.shape[1]
+    b = min(sim_cfg.batch_size, n)
+    lr = sim_cfg.lr
+    max_steps = sim_cfg.local_steps
+
+    grad_fn = jax.vmap(jax.value_and_grad(CLF.clf_loss))
+
+    @jax.jit
+    def train_all(global_params, caches, resume, steps_needed, stop_step,
+                  cache_every):
+        """All-fleet masked local training (incl. fused resume selection).
+
+        global_params: unstacked global model; each client starts from it
+                       unless ``resume`` picks its cached local state.
+        caches:       core.ClientCaches (stacked (N, ...) params).
+        resume:       (N,) bool — train from local cache (C3/C4).
+        steps_needed: (N,) steps each device must run this round (0 = idle).
+        stop_step:    (N,) interruption step (>= steps_needed: no failure).
+        cache_every:  (N,) cache interval in steps (C3 adaptive frequency).
+        Returns (final_params, cache_params, cached_steps, mean_loss).
+        """
+        start_params = core.resume_params(caches, global_params, resume)
+        zero_cache = start_params
+        loss0 = jnp.zeros((x_all.shape[0],), jnp.float32)
+
+        def step_fn(carry, j):
+            params, cache, cached_steps, loss_sum = carry
+            idx = (j * b + jnp.arange(b)) % n
+            xb = x_all[:, idx]
+            yb = y_all[:, idx]
+            loss, grads = grad_fn(params, xb, yb)
+            active = (j < steps_needed) & (j < stop_step)
+
+            def upd(p, g):
+                m = active.reshape((-1,) + (1,) * (p.ndim - 1))
+                return jnp.where(m, p - lr * g, p)
+
+            params = jax.tree.map(upd, params, grads)
+            do_cache = active & (((j + 1) % jnp.maximum(cache_every, 1))
+                                 == 0)
+
+            def cupd(c, p):
+                m = do_cache.reshape((-1,) + (1,) * (p.ndim - 1))
+                return jnp.where(m, p, c)
+
+            cache = jax.tree.map(cupd, cache, params)
+            cached_steps = jnp.where(do_cache, j + 1, cached_steps)
+            loss_sum = loss_sum + jnp.where(active, loss, 0.0)
+            return (params, cache, cached_steps, loss_sum), None
+
+        init = (start_params, zero_cache,
+                jnp.zeros((x_all.shape[0],), jnp.int32), loss0)
+        (params, cache, cached_steps, loss_sum), _ = jax.lax.scan(
+            step_fn, init, jnp.arange(max_steps))
+        done = jnp.minimum(steps_needed, stop_step)
+        mean_loss = loss_sum / jnp.maximum(done, 1)
+        return params, cache, cached_steps, mean_loss
+
+    return train_all
+
+
+# ---------------------------------------------------------------------------
+# Round history
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class History:
+    acc: List[float] = dataclasses.field(default_factory=list)
+    comm_mb: List[float] = dataclasses.field(default_factory=list)   # cum.
+    wall_clock: List[float] = dataclasses.field(default_factory=list)
+    received: List[int] = dataclasses.field(default_factory=list)
+    selected: List[int] = dataclasses.field(default_factory=list)
+    # eval_mask[t] is False when acc[t] is a carried-forward stale value
+    # (eval_every > 1 skipped the measurement that round)
+    eval_mask: List[bool] = dataclasses.field(default_factory=list)
+    part_count: Optional[np.ndarray] = None
+    per_class_acc: Optional[np.ndarray] = None
+    per_client_acc: Optional[np.ndarray] = None
+    final_params: Any = None
+
+    def _evaluated(self):
+        mask = self.eval_mask or [True] * len(self.acc)
+        for t, c, a, m in zip(self.wall_clock, self.comm_mb, self.acc,
+                              mask):
+            if m:
+                yield t, c, a
+
+    def time_to_accuracy(self, target: float) -> float:
+        for t, _, a in self._evaluated():
+            if a >= target:
+                return t
+        return float("inf")
+
+    def comm_to_accuracy(self, target: float) -> float:
+        for _, c, a in self._evaluated():
+            if a >= target:
+                return c
+        return float("inf")
+
+
+# ---------------------------------------------------------------------------
+# FleetEngine
+# ---------------------------------------------------------------------------
+
+class FleetEngine:
+    """Owns trainer + fused server step + fleet; runs policies by name.
+
+    Construction jits the fleet trainer once; ``run`` can then be called
+    repeatedly (different policies, same task) reusing the compiled round
+    path — the multi-policy comparison loop of the paper's Table 1.
+
+        engine = FleetEngine(data, sim_cfg, fl_cfg)
+        hist = engine.run("flude")                      # sim_cfg.rounds
+        hist = engine.run("random", time_budget=3600.0)
+
+    A fleet passed to the constructor is reused (and its RNG advances
+    across runs); otherwise each run draws a fresh ``Fleet(sim_cfg)`` so
+    fixed seeds reproduce.
+    """
+
+    def __init__(self, data: FederatedClassification, sim_cfg: SimConfig,
+                 fl_cfg: FLConfig, fleet: Optional[Fleet] = None):
+        self.data = data
+        self.sim_cfg = sim_cfg
+        self.fl_cfg = fl_cfg
+        self._fleet = fleet
+        self.trainer = make_trainer(sim_cfg, data)
+        self._acc_fn = jax.jit(CLF.clf_accuracy)
+        self._server_steps = {}
+        self._template = CLF.init_classifier(
+            jax.random.key(sim_cfg.seed + 1), dim=data.x.shape[-1],
+            num_classes=data.num_classes)
+
+    def _server_step(self, uses_cache: bool):
+        key = bool(uses_cache)
+        if key not in self._server_steps:
+            self._server_steps[key] = core.make_server_round_step(
+                self._template, local_steps=self.sim_cfg.local_steps,
+                agg_impl=self.fl_cfg.agg_impl,
+                staleness_discount=self.fl_cfg.staleness_discount,
+                uses_cache=key, block_c=self.fl_cfg.agg_block_c,
+                block_d=self.fl_cfg.agg_block_d)
+        return self._server_steps[key]
+
+    def run(self, policy: Union[str, Policy], rounds: Optional[int] = None,
+            time_budget: Optional[float] = None, eval_every: int = 1,
+            progress: Optional[Callable] = None,
+            diagnostics: bool = True) -> History:
+        """Run FL rounds.  ``time_budget`` (simulated seconds) caps the run
+        by wall clock instead of round count — the paper's comparison
+        regime: faster policies (shorter rounds) fit more rounds in the
+        same budget.  ``rounds`` (default ``sim_cfg.rounds``) remains the
+        hard round cap.  ``diagnostics=False`` skips the O(N)-eval
+        end-of-run per-class/per-client accuracy sweep (benchmarks)."""
+        sim_cfg, fl_cfg = self.sim_cfg, self.fl_cfg
+        fleet = self._fleet if self._fleet is not None else Fleet(sim_cfg)
+        if isinstance(policy, str):
+            policy = make_policy(policy, sim_cfg, fl_cfg, fleet)
+        state = policy.init_state()
+        n_rounds = sim_cfg.rounds if rounds is None else rounds
+
+        rng = jax.random.key(sim_cfg.seed)
+        global_params = self._template
+        caches = core.init_caches(global_params, fl_cfg.num_clients)
+        test_x = jnp.asarray(self.data.test_x)
+        test_y = jnp.asarray(self.data.test_y)
+        n_samples = jnp.full((fl_cfg.num_clients,), self.data.x.shape[1],
+                             jnp.float32)
+
+        # adaptive cache frequency (C3): steps between cache writes
+        cache_every_np = np.clip(np.round(
+            core.adaptive_cache_interval(2.0, fleet.battery,
+                                         fleet.stability)), 1, 4
+        ).astype(np.int32) if policy.uses_cache else \
+            np.full(fl_cfg.num_clients, BIG, np.int32)
+        cache_every = jnp.asarray(cache_every_np)
+
+        hist = History()
+        cum_comm = 0.0
+        cum_time = 0.0
+        acc = float("nan")
+        full_steps = np.full(fl_cfg.num_clients, sim_cfg.local_steps,
+                             np.int32)
+        ones_w = jnp.ones((fl_cfg.num_clients,), jnp.float32)
+        server_step = self._server_step(policy.uses_cache)
+
+        for rnd in range(n_rounds):
+            if time_budget is not None and cum_time >= time_budget:
+                break
+            rng, k_sel = jax.random.split(rng)
+            online = fleet.online_mask()
+            state, plan = policy.plan(
+                state, RoundObservation(rnd, online, caches), k_sel)
+            if getattr(plan, "_validated", False):
+                # RoundPlan.create already ran the full checks; only the
+                # fleet-size agreement is left to confirm
+                if plan.selected.shape[0] != fl_cfg.num_clients:
+                    raise ValueError(
+                        f"RoundPlan sized {plan.selected.shape[0]} for a "
+                        f"{fl_cfg.num_clients}-client fleet")
+            else:
+                plan.validate(fl_cfg.num_clients)
+            selected = np.asarray(plan.selected)
+            distribute = np.asarray(plan.distribute)
+            resume = np.asarray(plan.resume)
+
+            # per-device workload
+            prior_steps = np.round(
+                np.asarray(caches.progress) * sim_cfg.local_steps
+            ).astype(np.int32)
+            base_steps = full_steps if plan.steps_override is None \
+                else np.asarray(plan.steps_override)
+            steps_needed = np.where(resume,
+                                    np.maximum(base_steps - prior_steps, 1),
+                                    base_steps).astype(np.int32)
+            steps_needed = np.where(selected, steps_needed, 0)
+
+            # failures (exposure-scaled) + interruption points
+            fail = fleet.failure_draw(
+                steps_needed / max(sim_cfg.local_steps, 1))
+            fail &= selected
+            stop = np.where(fail, fleet.failure_step(steps_needed), BIG)
+
+            # local training; the start state (fresh global vs cached
+            # local) is selected on device inside the jitted trainer
+            final, cache_p, cached_steps, losses = self.trainer(
+                global_params, caches, jnp.asarray(resume),
+                jnp.asarray(steps_needed), jnp.asarray(stop), cache_every)
+
+            # timing + round termination (Algorithm 2 lines 13–16)
+            success = selected & ~fail & (steps_needed > 0)
+            completed = np.minimum(steps_needed, stop)
+            times = fleet.round_times(steps_needed, distribute, completed,
+                                      success)
+            quorum = int(np.ceil(plan.quorum))
+            finite = np.sort(times[np.isfinite(times)])
+            if finite.size >= quorum and quorum > 0:
+                t_cut = min(finite[quorum - 1], sim_cfg.round_deadline)
+            elif not policy.waits_for_stragglers and finite.size > 0:
+                # async/semi-async designs close at the last arrival
+                t_cut = min(finite[-1], sim_cfg.round_deadline)
+            else:
+                t_cut = sim_cfg.round_deadline
+            received = success & (times <= t_cut)
+            duration = t_cut if np.isfinite(t_cut) else \
+                sim_cfg.round_deadline
+
+            # fused server step (§4.3 hot path): aggregation weights with
+            # the staleness discount for stale BASE models, packed
+            # whole-model weighted aggregation, C3 cache write/clear —
+            # one jitted call, params never leave the device.
+            extra_w = ones_w if plan.agg_weights is None else \
+                jnp.asarray(plan.agg_weights, jnp.float32)
+            global_params, caches = server_step(
+                global_params, caches, final, cache_p, cached_steps,
+                jnp.asarray(selected), jnp.asarray(fail),
+                jnp.asarray(received), jnp.asarray(resume),
+                n_samples, extra_w, rnd)
+
+            state = policy.observe(
+                state, plan,
+                RoundReport(received=received, fail=fail,
+                            losses=np.asarray(losses), durations=times,
+                            duration=duration, rnd=rnd))
+
+            cum_comm += (distribute.sum() + received.sum()) \
+                * sim_cfg.model_mb
+            cum_time += duration
+            evaluated = rnd % eval_every == 0 or rnd == n_rounds - 1
+            if evaluated:
+                acc = float(self._acc_fn(global_params, test_x, test_y))
+            hist.acc.append(acc)
+            hist.eval_mask.append(evaluated)
+            hist.comm_mb.append(cum_comm)
+            hist.wall_clock.append(cum_time)
+            hist.received.append(int(received.sum()))
+            hist.selected.append(int(selected.sum()))
+            if progress and rnd % 10 == 0:
+                progress(rnd, acc, cum_comm, cum_time)
+
+        # final diagnostics (paper Fig. 1(b)(c))
+        if diagnostics:
+            hist.per_class_acc = np.asarray(CLF.clf_per_class_accuracy(
+                global_params, test_x, test_y, self.data.num_classes))
+            pc = []
+            for i in range(min(fl_cfg.num_clients, self.data.x.shape[0])):
+                pc.append(float(self._acc_fn(
+                    global_params, jnp.asarray(self.data.x[i]),
+                    jnp.asarray(self.data.y[i]))))
+            hist.per_client_acc = np.asarray(pc)
+        for k, v in policy.history_extras(state).items():
+            setattr(hist, k, v)
+        hist.final_params = global_params
+        return hist

@@ -1,0 +1,263 @@
+"""The six built-in server policies, ported to the typed registry API.
+
+FLUDE (the paper) plus the five comparison baselines.  Each policy keeps
+its mutable per-run state in an explicit ``PolicyState`` returned by
+``init_state`` and threaded through ``plan``/``observe`` — the engine owns
+the loop.  flude/safa/asyncfeded plan from device-resident cache metadata;
+oort/fedsea are inherently host-side (numpy utility bookkeeping) and stay
+so behind the same typed interface.
+
+Caveat on purity: states that carry a ``np.random.RandomState`` (random,
+oort, safa, fedsea) advance it *in place* inside ``plan`` — the typed
+transitions are pure in their array fields but the host RNG is a cursor,
+matching the historical runner's draw sequence exactly.  Replaying a
+retained state re-draws fresh randomness; speculative/pipelined planning
+over these policies must checkpoint the RandomState explicitly
+(``state.get_state()``/``set_state``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.fl.api import (Policy, RoundObservation, RoundPlan, RoundReport,
+                          register_policy)
+
+BIG = 1 << 20
+
+
+# ---------------------------------------------------------------------------
+# FLUDE (paper §4, Algorithms 1–2)
+# ---------------------------------------------------------------------------
+
+class FludePolicyState(NamedTuple):
+    core: core.FludeState
+    last: Optional[core.FludePlan]     # plan pending its observe()
+
+
+# Alg. 1/2 planning and Eq. 1/3 bookkeeping are pure jnp over fixed-shape
+# fleet arrays — one jitted dispatch per round each, instead of the old
+# runner's eager op-by-op evaluation.  Memoized per config so repeated
+# short runs (test suites, policy sweeps) never re-trace; bounded so a
+# config sweep doesn't pin compiled executables for the process lifetime.
+@functools.lru_cache(maxsize=8)
+def _flude_plan_jit(fl_cfg, with_hints: bool):
+    if with_hints:
+        return jax.jit(lambda st, caches, online, rng, hints:
+                       core.plan_round(st, caches, online, fl_cfg, rng,
+                                       explore_hints=hints))
+    return jax.jit(lambda st, caches, online, rng, hints:
+                   core.plan_round(st, caches, online, fl_cfg, rng))
+
+
+@functools.lru_cache(maxsize=8)
+def _flude_update_jit(fl_cfg):
+    return jax.jit(lambda st, plan, received:
+                   core.update_after_round(st, plan, received, fl_cfg))
+
+
+@register_policy("flude")
+class FludePolicy(Policy):
+    uses_cache = True
+
+    def __init__(self, sim_cfg, fl_cfg, fleet=None):
+        super().__init__(sim_cfg, fl_cfg, fleet)
+        # §4.1 optional: bias exploration toward charged/stable devices
+        self._hints = None
+        if fleet is not None:
+            self._hints = jnp.asarray(fleet.battery * fleet.stability,
+                                      jnp.float32)
+        self._plan_jit = _flude_plan_jit(fl_cfg, self._hints is not None)
+        self._update_jit = _flude_update_jit(fl_cfg)
+        if self._hints is None:
+            self._hints = jnp.zeros((fl_cfg.num_clients,), jnp.float32)
+
+    def init_state(self) -> FludePolicyState:
+        return FludePolicyState(core.init_state(self.fl_cfg), None)
+
+    def plan(self, state, obs: RoundObservation, rng):
+        p = self._plan_jit(state.core, obs.caches,
+                           jnp.asarray(obs.online), rng, self._hints)
+        selected = np.asarray(p.selected)
+        quorum = min(float(p.quorum), float(selected.sum()))
+        plan = RoundPlan.create(selected, np.asarray(p.distribute),
+                                np.asarray(p.resume), quorum)
+        return FludePolicyState(state.core, p), plan
+
+    def observe(self, state, plan, report: RoundReport):
+        new_core = self._update_jit(state.core, state.last,
+                                    jnp.asarray(report.received))
+        return FludePolicyState(new_core, None)
+
+    def history_extras(self, state):
+        return {"part_count": np.asarray(state.core.part_count)}
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+@register_policy("random")
+class RandomPolicy(Policy):
+    """Vanilla FedAvg: uniform random selection, full distribution."""
+
+    def init_state(self) -> np.random.RandomState:
+        return np.random.RandomState(self.sim_cfg.seed + 17)
+
+    def plan(self, state, obs, rng):
+        N = self.fl_cfg.num_clients
+        sel = np.zeros(N, bool)
+        idx = np.flatnonzero(obs.online)
+        take = min(self.fl_cfg.clients_per_round, idx.size)
+        sel[state.choice(idx, take, replace=False)] = True
+        return state, RoundPlan.create(sel, sel, np.zeros(N, bool),
+                                       float(take))
+
+
+@dataclasses.dataclass(frozen=True)
+class OortState:
+    util: np.ndarray          # (N,) statistical utility (inf = unexplored)
+    duration: np.ndarray      # (N,) last observed round duration
+    eps: float
+    rs: np.random.RandomState
+
+
+@register_policy("oort")
+class OortPolicy(Policy):
+    """Oort [OSDI'21], simplified: statistical utility = loss·sqrt(n) with a
+    system-speed penalty, ε-greedy exploration."""
+
+    def __init__(self, sim_cfg, fl_cfg, fleet=None):
+        super().__init__(sim_cfg, fl_cfg, fleet)
+        if fleet is None:
+            raise ValueError("oort needs the fleet's speed profile")
+        self.pref_duration = np.median(
+            sim_cfg.local_steps / fleet.steps_per_sec)
+
+    def init_state(self) -> OortState:
+        N = self.fl_cfg.num_clients
+        return OortState(np.full(N, np.inf), np.ones(N), 0.9,
+                         np.random.RandomState(self.sim_cfg.seed + 29))
+
+    def plan(self, state, obs, rng):
+        N = self.fl_cfg.num_clients
+        online = obs.online
+        X = min(self.fl_cfg.clients_per_round, int(online.sum()))
+        n_explore = int(round(state.eps * X))
+        sel = np.zeros(N, bool)
+        explored = np.isfinite(state.util)
+        pool_new = np.flatnonzero(online & ~explored)
+        take_new = min(n_explore, pool_new.size)
+        if take_new:
+            sel[state.rs.choice(pool_new, take_new, replace=False)] = True
+        penal = np.where(state.duration > self.pref_duration,
+                         (self.pref_duration / state.duration) ** 0.5, 1.0)
+        score = np.where(online & explored & ~sel,
+                         np.nan_to_num(state.util, posinf=0.0) * penal,
+                         -np.inf)
+        rest = X - sel.sum()
+        if rest > 0:
+            top = np.argsort(-score)[:rest]
+            sel[top[score[top] > -np.inf]] = True
+        new_state = dataclasses.replace(
+            state, eps=max(state.eps * 0.98, 0.2))
+        return new_state, RoundPlan.create(sel, sel, np.zeros(N, bool),
+                                           float(sel.sum()))
+
+    def observe(self, state, plan, report):
+        upd = np.asarray(plan.selected) & report.received
+        util = np.where(upd, report.losses * np.sqrt(
+            self.sim_cfg.batch_size * self.sim_cfg.local_steps), state.util)
+        duration = np.where(upd, report.durations, state.duration)
+        return dataclasses.replace(state, util=util, duration=duration)
+
+
+@register_policy("safa")
+class SafaPolicy(Policy):
+    """SAFA [IEEE TC'20], simplified semi-async: crashed/straggling devices
+    keep local progress (lag-tolerant cache) and are force-synced only when
+    their version lag exceeds τ.  Rounds close on SAFA's synchronization
+    quota (a fraction of the selected set), not on the last arrival —
+    that is what makes it SEMI-async."""
+    uses_cache = True
+    quota = 0.75
+
+    def __init__(self, sim_cfg, fl_cfg, fleet=None, tau: int = 5):
+        super().__init__(sim_cfg, fl_cfg, fleet)
+        self.tau = tau
+
+    def init_state(self) -> np.random.RandomState:
+        return np.random.RandomState(self.sim_cfg.seed + 43)
+
+    def plan(self, state, obs, rng):
+        N = self.fl_cfg.num_clients
+        sel = np.zeros(N, bool)
+        idx = np.flatnonzero(obs.online)
+        take = min(self.fl_cfg.clients_per_round, idx.size)
+        sel[state.choice(idx, take, replace=False)] = True
+        stamp = np.asarray(obs.caches.round_stamp)
+        lag = np.where(stamp >= 0, obs.rnd - stamp, BIG)
+        resume = sel & (lag <= self.tau)
+        # quota of a small selected set can floor to 0, which would
+        # idle-wait the full deadline every round — any selected set
+        # needs a quorum of at least one upload
+        quorum = float(np.floor(sel.sum() * self.quota))
+        if take > 0:
+            quorum = max(quorum, 1.0)
+        return state, RoundPlan.create(sel, sel & ~resume, resume, quorum)
+
+
+@register_policy("fedsea")
+class FedSeaPolicy(Policy):
+    """FedSEA [SenSys'22], simplified: balance completion times by scaling
+    local steps with device speed; deadline-based aggregation."""
+    waits_for_stragglers = False
+
+    def __init__(self, sim_cfg, fl_cfg, fleet=None):
+        super().__init__(sim_cfg, fl_cfg, fleet)
+        if fleet is None:
+            raise ValueError("fedsea needs the fleet's speed profile")
+        rel = fleet.steps_per_sec / fleet.steps_per_sec.max()
+        self.steps = np.clip(
+            np.round(sim_cfg.local_steps * rel), 1,
+            sim_cfg.local_steps).astype(np.int32)
+
+    def init_state(self) -> np.random.RandomState:
+        return np.random.RandomState(self.sim_cfg.seed + 57)
+
+    def plan(self, state, obs, rng):
+        N = self.fl_cfg.num_clients
+        sel = np.zeros(N, bool)
+        idx = np.flatnonzero(obs.online)
+        take = min(self.fl_cfg.clients_per_round, idx.size)
+        sel[state.choice(idx, take, replace=False)] = True
+        return state, RoundPlan.create(sel, sel, np.zeros(N, bool),
+                                       float(sel.sum()),
+                                       steps_override=self.steps)
+
+
+@register_policy("asyncfeded")
+class AsyncFedEdPolicy(Policy):
+    """AsyncFedED [2022], simplified: every online device trains; arrivals
+    are aggregated with staleness-adaptive weights (euclidean-distance
+    surrogate = version lag)."""
+    waits_for_stragglers = False
+
+    def init_state(self) -> np.ndarray:
+        return np.zeros(self.fl_cfg.num_clients, np.int32)   # last sync rnd
+
+    def plan(self, state, obs, rng):
+        sel = obs.online.copy()
+        lag = obs.rnd - state
+        w = 1.0 / (1.0 + np.maximum(lag, 0))
+        return state, RoundPlan.create(sel, sel, np.zeros_like(sel),
+                                       float(sel.sum()), agg_weights=w)
+
+    def observe(self, state, plan, report):
+        return np.where(report.received, report.rnd, state)

@@ -1,465 +1,32 @@
-"""Cross-device FL round runner: FLUDE + baselines over the fleet simulator.
+"""Back-compat runner entry point over the FleetEngine.
 
-Local training is vectorized over the whole fleet (vmap) with per-device
-step masks realizing selection, interruption and cache-resume — fixed-shape,
-jits once.  Server-side policy logic (FLUDE Algorithms 1–2, or a baseline
-policy) runs between rounds.
+``run_fl(policy_name, data, sim_cfg, fl_cfg)`` is the historical one-shot
+API; it now builds a :class:`repro.fl.engine.FleetEngine` and delegates.
+New code should construct the engine directly (it reuses the compiled
+round path across policies) and the typed policy API in ``repro.fl.api``.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro import core
 from repro.configs.base import FLConfig
 from repro.data.synthetic import FederatedClassification
-from repro.fl import classifier as CLF
+from repro.fl.api import (Policy, RoundObservation, RoundPlan,  # noqa: F401
+                          RoundReport, available_policies, make_policy,
+                          register_policy)
+from repro.fl.engine import FleetEngine, History, make_trainer  # noqa: F401
+from repro.fl.policies import (AsyncFedEdPolicy, FedSeaPolicy,  # noqa: F401
+                               FludePolicy, OortPolicy, RandomPolicy,
+                               SafaPolicy)
 from repro.fl.simulator import Fleet, SimConfig
 
-BIG = 1 << 20
-
-
-# ---------------------------------------------------------------------------
-# Vectorized local trainer
-# ---------------------------------------------------------------------------
-
-def make_trainer(sim_cfg: SimConfig, data: FederatedClassification):
-    x_all = jnp.asarray(data.x)            # (N, n, d)
-    y_all = jnp.asarray(data.y)            # (N, n)
-    n = x_all.shape[1]
-    b = min(sim_cfg.batch_size, n)
-    lr = sim_cfg.lr
-    max_steps = sim_cfg.local_steps
-
-    grad_fn = jax.vmap(jax.value_and_grad(CLF.clf_loss))
-
-    @jax.jit
-    def train_all(global_params, caches, resume, steps_needed, stop_step,
-                  cache_every):
-        """All-fleet masked local training (incl. fused resume selection).
-
-        global_params: unstacked global model; each client starts from it
-                       unless ``resume`` picks its cached local state.
-        caches:       core.ClientCaches (stacked (N, ...) params).
-        resume:       (N,) bool — train from local cache (C3/C4).
-        steps_needed: (N,) steps each device must run this round (0 = idle).
-        stop_step:    (N,) interruption step (>= steps_needed: no failure).
-        cache_every:  (N,) cache interval in steps (C3 adaptive frequency).
-        Returns (final_params, cache_params, cached_steps, mean_loss).
-        """
-        start_params = core.resume_params(caches, global_params, resume)
-        zero_cache = start_params
-        loss0 = jnp.zeros((x_all.shape[0],), jnp.float32)
-
-        def step_fn(carry, j):
-            params, cache, cached_steps, loss_sum = carry
-            idx = (j * b + jnp.arange(b)) % n
-            xb = x_all[:, idx]
-            yb = y_all[:, idx]
-            loss, grads = grad_fn(params, xb, yb)
-            active = (j < steps_needed) & (j < stop_step)
-
-            def upd(p, g):
-                m = active.reshape((-1,) + (1,) * (p.ndim - 1))
-                return jnp.where(m, p - lr * g, p)
-
-            params = jax.tree.map(upd, params, grads)
-            do_cache = active & (((j + 1) % jnp.maximum(cache_every, 1))
-                                 == 0)
-
-            def cupd(c, p):
-                m = do_cache.reshape((-1,) + (1,) * (p.ndim - 1))
-                return jnp.where(m, p, c)
-
-            cache = jax.tree.map(cupd, cache, params)
-            cached_steps = jnp.where(do_cache, j + 1, cached_steps)
-            loss_sum = loss_sum + jnp.where(active, loss, 0.0)
-            return (params, cache, cached_steps, loss_sum), None
-
-        init = (start_params, zero_cache,
-                jnp.zeros((x_all.shape[0],), jnp.int32), loss0)
-        (params, cache, cached_steps, loss_sum), _ = jax.lax.scan(
-            step_fn, init, jnp.arange(max_steps))
-        done = jnp.minimum(steps_needed, stop_step)
-        mean_loss = loss_sum / jnp.maximum(done, 1)
-        return params, cache, cached_steps, mean_loss
-
-    return train_all
-
-
-# ---------------------------------------------------------------------------
-# Round history
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class History:
-    acc: List[float] = dataclasses.field(default_factory=list)
-    comm_mb: List[float] = dataclasses.field(default_factory=list)   # cum.
-    wall_clock: List[float] = dataclasses.field(default_factory=list)
-    received: List[int] = dataclasses.field(default_factory=list)
-    selected: List[int] = dataclasses.field(default_factory=list)
-    part_count: Optional[np.ndarray] = None
-    per_class_acc: Optional[np.ndarray] = None
-    per_client_acc: Optional[np.ndarray] = None
-
-    def time_to_accuracy(self, target: float) -> float:
-        for t, a in zip(self.wall_clock, self.acc):
-            if a >= target:
-                return t
-        return float("inf")
-
-    def comm_to_accuracy(self, target: float) -> float:
-        for c, a in zip(self.comm_mb, self.acc):
-            if a >= target:
-                return c
-        return float("inf")
-
-
-# ---------------------------------------------------------------------------
-# Policies
-# ---------------------------------------------------------------------------
-
-class Policy:
-    """Server-side selection/distribution policy interface."""
-    name = "base"
-    uses_cache = False
-    waits_for_stragglers = True   # sync designs idle-wait to the deadline
-
-    def __init__(self, sim_cfg: SimConfig, fl_cfg: FLConfig):
-        self.sim_cfg = sim_cfg
-        self.fl_cfg = fl_cfg
-
-    def plan(self, rnd, online, caches, rng) -> Dict[str, np.ndarray]:
-        raise NotImplementedError
-
-    def observe(self, plan, received, losses, durations):
-        pass
-
-
-class FludePolicy(Policy):
-    name = "flude"
-    uses_cache = True
-
-    def __init__(self, sim_cfg, fl_cfg, fleet=None):
-        super().__init__(sim_cfg, fl_cfg)
-        self.state = core.init_state(fl_cfg)
-        # §4.1 optional: bias exploration toward charged/stable devices
-        self._hints = None
-        if fleet is not None:
-            self._hints = jnp.asarray(fleet.battery * fleet.stability,
-                                      jnp.float32)
-
-    def plan(self, rnd, online, caches, rng):
-        p = core.plan_round(self.state, caches, jnp.asarray(online),
-                            self.fl_cfg, rng, explore_hints=self._hints)
-        self._last = p
-        return {"selected": np.asarray(p.selected),
-                "distribute": np.asarray(p.distribute),
-                "resume": np.asarray(p.resume),
-                "quorum": float(p.quorum)}
-
-    def observe(self, plan, received, losses, durations):
-        self.state = core.update_after_round(
-            self.state, self._last, jnp.asarray(received), self.fl_cfg)
-
-
-class RandomPolicy(Policy):
-    """Vanilla FedAvg: uniform random selection, full distribution."""
-    name = "random"
-
-    def __init__(self, sim_cfg, fl_cfg):
-        super().__init__(sim_cfg, fl_cfg)
-        self._rng = np.random.RandomState(sim_cfg.seed + 17)
-
-    def plan(self, rnd, online, caches, rng):
-        N = self.fl_cfg.num_clients
-        sel = np.zeros(N, bool)
-        idx = np.flatnonzero(online)
-        take = min(self.fl_cfg.clients_per_round, idx.size)
-        sel[self._rng.choice(idx, take, replace=False)] = True
-        return {"selected": sel, "distribute": sel,
-                "resume": np.zeros(N, bool), "quorum": float(take)}
-
-
-class OortPolicy(Policy):
-    """Oort [OSDI'21], simplified: statistical utility = loss·sqrt(n) with a
-    system-speed penalty, ε-greedy exploration."""
-    name = "oort"
-
-    def __init__(self, sim_cfg, fl_cfg, fleet: Fleet):
-        super().__init__(sim_cfg, fl_cfg)
-        N = fl_cfg.num_clients
-        self.util = np.full(N, np.inf)        # unexplored = max utility
-        self.duration = np.ones(N)
-        self.eps = 0.9
-        self._rng = np.random.RandomState(sim_cfg.seed + 29)
-        self.pref_duration = np.median(
-            sim_cfg.local_steps / fleet.steps_per_sec)
-
-    def plan(self, rnd, online, caches, rng):
-        N = self.fl_cfg.num_clients
-        X = min(self.fl_cfg.clients_per_round, int(online.sum()))
-        n_explore = int(round(self.eps * X))
-        sel = np.zeros(N, bool)
-        explored = np.isfinite(self.util)
-        pool_new = np.flatnonzero(online & ~explored)
-        take_new = min(n_explore, pool_new.size)
-        if take_new:
-            sel[self._rng.choice(pool_new, take_new, replace=False)] = True
-        penal = np.where(self.duration > self.pref_duration,
-                         (self.pref_duration / self.duration) ** 0.5, 1.0)
-        score = np.where(online & explored & ~sel,
-                         np.nan_to_num(self.util, posinf=0.0) * penal,
-                         -np.inf)
-        rest = X - sel.sum()
-        if rest > 0:
-            top = np.argsort(-score)[:rest]
-            sel[top[score[top] > -np.inf]] = True
-        self.eps = max(self.eps * 0.98, 0.2)
-        return {"selected": sel, "distribute": sel,
-                "resume": np.zeros(N, bool), "quorum": float(sel.sum())}
-
-    def observe(self, plan, received, losses, durations):
-        upd = plan["selected"] & received
-        self.util = np.where(upd, losses * np.sqrt(
-            self.sim_cfg.batch_size * self.sim_cfg.local_steps), self.util)
-        self.duration = np.where(upd, durations, self.duration)
-
-
-class SafaPolicy(Policy):
-    """SAFA [IEEE TC'20], simplified semi-async: crashed/straggling devices
-    keep local progress (lag-tolerant cache) and are force-synced only when
-    their version lag exceeds τ.  Rounds close on SAFA's synchronization
-    quota (a fraction of the selected set), not on the last arrival —
-    that is what makes it SEMI-async."""
-    name = "safa"
-    uses_cache = True
-    quota = 0.75
-
-    def __init__(self, sim_cfg, fl_cfg, tau: int = 5):
-        super().__init__(sim_cfg, fl_cfg)
-        self.tau = tau
-        self._rng = np.random.RandomState(sim_cfg.seed + 43)
-
-    def plan(self, rnd, online, caches, rng):
-        N = self.fl_cfg.num_clients
-        sel = np.zeros(N, bool)
-        idx = np.flatnonzero(online)
-        take = min(self.fl_cfg.clients_per_round, idx.size)
-        sel[self._rng.choice(idx, take, replace=False)] = True
-        stamp = np.asarray(caches.round_stamp)
-        lag = np.where(stamp >= 0, rnd - stamp, BIG)
-        resume = sel & (lag <= self.tau)
-        return {"selected": sel, "distribute": sel & ~resume,
-                "resume": resume,
-                "quorum": float(np.floor(sel.sum() * self.quota))}
-
-
-class FedSeaPolicy(Policy):
-    """FedSEA [SenSys'22], simplified: balance completion times by scaling
-    local steps with device speed; deadline-based aggregation."""
-    name = "fedsea"
-    waits_for_stragglers = False
-
-    def __init__(self, sim_cfg, fl_cfg, fleet: Fleet):
-        super().__init__(sim_cfg, fl_cfg)
-        self.fleet = fleet
-        self._rng = np.random.RandomState(sim_cfg.seed + 57)
-        rel = fleet.steps_per_sec / fleet.steps_per_sec.max()
-        self.steps = np.clip(
-            np.round(sim_cfg.local_steps * rel), 1,
-            sim_cfg.local_steps).astype(np.int32)
-
-    def plan(self, rnd, online, caches, rng):
-        N = self.fl_cfg.num_clients
-        sel = np.zeros(N, bool)
-        idx = np.flatnonzero(online)
-        take = min(self.fl_cfg.clients_per_round, idx.size)
-        sel[self._rng.choice(idx, take, replace=False)] = True
-        return {"selected": sel, "distribute": sel,
-                "resume": np.zeros(N, bool), "quorum": float(sel.sum()),
-                "steps_override": self.steps}
-
-
-class AsyncFedEdPolicy(Policy):
-    """AsyncFedED [2022], simplified: every online device trains; arrivals
-    are aggregated with staleness-adaptive weights (euclidean-distance
-    surrogate = version lag)."""
-    name = "asyncfeded"
-    waits_for_stragglers = False
-
-    def __init__(self, sim_cfg, fl_cfg):
-        super().__init__(sim_cfg, fl_cfg)
-        N = fl_cfg.num_clients
-        self.last_sync = np.zeros(N, np.int32)
-
-    def plan(self, rnd, online, caches, rng):
-        sel = online.copy()
-        lag = rnd - self.last_sync
-        w = 1.0 / (1.0 + np.maximum(lag, 0))
-        self._rnd = rnd
-        return {"selected": sel, "distribute": sel,
-                "resume": np.zeros_like(sel), "quorum": float(sel.sum()),
-                "agg_weights": w}
-
-    def observe(self, plan, received, losses, durations):
-        self.last_sync = np.where(received, self._rnd, self.last_sync)
-
-
-def make_policy(name: str, sim_cfg: SimConfig, fl_cfg: FLConfig,
-                fleet: Fleet) -> Policy:
-    if name == "flude":
-        return FludePolicy(sim_cfg, fl_cfg, fleet)
-    if name == "random":
-        return RandomPolicy(sim_cfg, fl_cfg)
-    if name == "oort":
-        return OortPolicy(sim_cfg, fl_cfg, fleet)
-    if name == "safa":
-        return SafaPolicy(sim_cfg, fl_cfg)
-    if name == "fedsea":
-        return FedSeaPolicy(sim_cfg, fl_cfg, fleet)
-    if name == "asyncfeded":
-        return AsyncFedEdPolicy(sim_cfg, fl_cfg)
-    raise KeyError(name)
-
-
-# ---------------------------------------------------------------------------
-# Main loop
-# ---------------------------------------------------------------------------
 
 def run_fl(policy_name: str, data: FederatedClassification,
            sim_cfg: SimConfig, fl_cfg: FLConfig,
            fleet: Optional[Fleet] = None, eval_every: int = 1,
            time_budget: Optional[float] = None,
            progress: Optional[Callable] = None) -> History:
-    """Run FL rounds.  ``time_budget`` (simulated seconds) caps the run by
-    wall clock instead of round count — the paper's comparison regime:
-    faster policies (shorter rounds) fit more rounds in the same budget.
-    ``sim_cfg.rounds`` remains the hard round cap."""
-    fleet = fleet or Fleet(sim_cfg)
-    policy = make_policy(policy_name, sim_cfg, fl_cfg, fleet)
-    trainer = make_trainer(sim_cfg, data)
-
-    rng = jax.random.key(sim_cfg.seed)
-    global_params = CLF.init_classifier(
-        jax.random.key(sim_cfg.seed + 1), dim=data.x.shape[-1],
-        num_classes=data.num_classes)
-    caches = core.init_caches(global_params, fl_cfg.num_clients)
-    test_x = jnp.asarray(data.test_x)
-    test_y = jnp.asarray(data.test_y)
-    n_samples = jnp.full((fl_cfg.num_clients,), data.x.shape[1], jnp.float32)
-
-    # adaptive cache frequency (C3): steps between cache writes
-    cache_every_np = np.clip(np.round(
-        core.adaptive_cache_interval(2.0, fleet.battery,
-                                     fleet.stability)), 1, 4
-    ).astype(np.int32) if policy.uses_cache else \
-        np.full(fl_cfg.num_clients, BIG, np.int32)
-
-    hist = History()
-    cum_comm = 0.0
-    cum_time = 0.0
-    acc_fn = jax.jit(CLF.clf_accuracy)
-    ones_w = jnp.ones((fl_cfg.num_clients,), jnp.float32)
-    # fused server step: weights + packed aggregation + cache bookkeeping
-    server_step = core.make_server_round_step(
-        global_params, local_steps=sim_cfg.local_steps,
-        agg_impl=fl_cfg.agg_impl, staleness_discount=1.0,
-        uses_cache=policy.uses_cache, block_c=fl_cfg.agg_block_c,
-        block_d=fl_cfg.agg_block_d)
-
-    for rnd in range(sim_cfg.rounds):
-        if time_budget is not None and cum_time >= time_budget:
-            break
-        rng, k_sel = jax.random.split(rng)
-        online = fleet.online_mask()
-        plan = policy.plan(rnd, online, caches, k_sel)
-        selected = plan["selected"]
-        distribute = plan["distribute"]
-        resume = plan["resume"]
-
-        # per-device workload
-        prior_steps = np.round(
-            np.asarray(caches.progress) * sim_cfg.local_steps
-        ).astype(np.int32)
-        base_steps = plan.get("steps_override",
-                              np.full(fl_cfg.num_clients,
-                                      sim_cfg.local_steps, np.int32))
-        steps_needed = np.where(resume,
-                                np.maximum(base_steps - prior_steps, 1),
-                                base_steps).astype(np.int32)
-        steps_needed = np.where(selected, steps_needed, 0)
-
-        # failures (exposure-scaled) + interruption points
-        fail = fleet.failure_draw(steps_needed / max(sim_cfg.local_steps, 1))
-        fail &= selected
-        stop = np.where(fail, fleet.failure_step(steps_needed), BIG)
-
-        # local training; the start state (fresh global vs cached local)
-        # is selected on device inside the jitted trainer
-        final, cache_p, cached_steps, losses = trainer(
-            global_params, caches, jnp.asarray(resume),
-            jnp.asarray(steps_needed), jnp.asarray(stop),
-            jnp.asarray(cache_every_np))
-
-        # timing + round termination (Algorithm 2 lines 13–16)
-        success = selected & ~fail & (steps_needed > 0)
-        completed = np.minimum(steps_needed, stop)
-        times = fleet.round_times(steps_needed, distribute, completed,
-                                  success)
-        quorum = int(np.ceil(plan["quorum"]))
-        finite = np.sort(times[np.isfinite(times)])
-        if finite.size >= quorum and quorum > 0:
-            t_cut = min(finite[quorum - 1], sim_cfg.round_deadline)
-        elif not policy.waits_for_stragglers and finite.size > 0:
-            # async/semi-async designs close the round at the last arrival
-            t_cut = min(finite[-1], sim_cfg.round_deadline)
-        else:
-            t_cut = sim_cfg.round_deadline
-        received = success & (times <= t_cut)
-        duration = t_cut if np.isfinite(t_cut) else sim_cfg.round_deadline
-
-        # fused server step (§4.3 hot path): aggregation weights with the
-        # staleness discount for stale BASE models (refs [28–32]; applies
-        # uniformly to every policy that resumes from old state — FLUDE
-        # caches, SAFA lag-tolerant clients), packed whole-model weighted
-        # aggregation, and C3 cache write/clear — one jitted call, params
-        # never leave the device.
-        extra_w = jnp.asarray(plan["agg_weights"], jnp.float32) \
-            if "agg_weights" in plan else ones_w
-        global_params, caches = server_step(
-            global_params, caches, final, cache_p, cached_steps,
-            jnp.asarray(selected), jnp.asarray(fail),
-            jnp.asarray(received), jnp.asarray(resume),
-            n_samples, extra_w, rnd)
-
-        policy.observe(plan, received, np.asarray(losses), times)
-
-        cum_comm += (distribute.sum() + received.sum()) * sim_cfg.model_mb
-        cum_time += duration
-        if rnd % eval_every == 0 or rnd == sim_cfg.rounds - 1:
-            acc = float(acc_fn(global_params, test_x, test_y))
-        hist.acc.append(acc)
-        hist.comm_mb.append(cum_comm)
-        hist.wall_clock.append(cum_time)
-        hist.received.append(int(received.sum()))
-        hist.selected.append(int(selected.sum()))
-        if progress and rnd % 10 == 0:
-            progress(rnd, acc, cum_comm, cum_time)
-
-    # final diagnostics (paper Fig. 1(b)(c))
-    hist.per_class_acc = np.asarray(CLF.clf_per_class_accuracy(
-        global_params, test_x, test_y, data.num_classes))
-    pc = []
-    for i in range(min(fl_cfg.num_clients, data.x.shape[0])):
-        pc.append(float(acc_fn(global_params, jnp.asarray(data.x[i]),
-                               jnp.asarray(data.y[i]))))
-    hist.per_client_acc = np.asarray(pc)
-    if isinstance(policy, FludePolicy):
-        hist.part_count = np.asarray(policy.state.part_count)
-    hist.final_params = global_params
-    return hist
+    """One-shot FL run: engine construction + ``engine.run`` in one call."""
+    engine = FleetEngine(data, sim_cfg, fl_cfg, fleet=fleet)
+    return engine.run(policy_name, time_budget=time_budget,
+                      eval_every=eval_every, progress=progress)

@@ -1,0 +1,299 @@
+"""Typed policy API: registry, RoundPlan validation, engine semantics,
+and cross-policy equivalence with the pre-refactor runner (golden file).
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import core
+from repro.configs.base import FLConfig
+from repro.data.synthetic import federated_classification
+from repro.fl import (Fleet, FleetEngine, History, Policy, RoundObservation,
+                      RoundPlan, SimConfig, available_policies, get_policy,
+                      make_policy, register_policy, run_fl)
+from repro.fl import api as API
+from repro.fl.policies import FludePolicy, SafaPolicy
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "history_prerefactor.json")
+BUILTINS = ("flude", "random", "oort", "safa", "fedsea", "asyncfeded")
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_has_builtins():
+    assert set(BUILTINS) <= set(available_policies())
+
+
+def test_registry_roundtrip():
+    assert get_policy("flude") is FludePolicy
+    sim = SimConfig(num_clients=8)
+    fl = FLConfig(num_clients=8, clients_per_round=4)
+    pol = make_policy("safa", sim, fl)
+    assert isinstance(pol, SafaPolicy) and pol.name == "safa"
+
+
+def test_registry_unknown_name():
+    with pytest.raises(KeyError, match="unknown policy 'nope'"):
+        get_policy("nope")
+    with pytest.raises(KeyError, match="registered:"):
+        make_policy("nope", SimConfig(), FLConfig())
+
+
+def test_register_decorator_and_duplicates():
+    @register_policy("_test_dummy")
+    class Dummy(Policy):
+        pass
+    try:
+        assert get_policy("_test_dummy") is Dummy
+        assert Dummy.name == "_test_dummy"
+        with pytest.raises(ValueError, match="already registered"):
+            @register_policy("_test_dummy")
+            class Dummy2(Policy):
+                pass
+
+        @register_policy("_test_dummy", allow_override=True)
+        class Dummy3(Policy):
+            pass
+        assert get_policy("_test_dummy") is Dummy3
+        with pytest.raises(TypeError):
+            register_policy("_test_fn")(lambda: None)
+    finally:
+        API._REGISTRY.pop("_test_dummy", None)
+
+
+# ---------------------------------------------------------------------------
+# RoundPlan validation
+# ---------------------------------------------------------------------------
+
+def _masks(n=8, k=3):
+    sel = np.zeros(n, bool)
+    sel[:k] = True
+    return sel
+
+
+def test_roundplan_create_defaults():
+    sel = _masks()
+    p = RoundPlan.create(sel, sel, np.zeros(8, bool), 3.0)
+    assert p.steps_override is None and p.agg_weights is None
+    assert p.quorum == 3.0
+    assert p.validate(8) is p
+
+
+def test_roundplan_rejects_quorum_over_selected():
+    sel = _masks(8, 3)
+    with pytest.raises(ValueError, match="exceeds the selected count"):
+        RoundPlan.create(sel, sel, np.zeros(8, bool), 5.0)
+
+
+def test_roundplan_rejects_zero_quorum_with_selection():
+    sel = _masks(8, 3)
+    with pytest.raises(ValueError, match="idle-waits"):
+        RoundPlan.create(sel, sel, np.zeros(8, bool), 0.0)
+    # no selection -> zero quorum is the only legal value
+    empty = np.zeros(8, bool)
+    RoundPlan.create(empty, empty, empty, 0.0)
+
+
+def test_roundplan_rejects_bad_shapes_and_dtypes():
+    sel = _masks()
+    with pytest.raises(ValueError, match="1-D mask"):
+        RoundPlan.create(sel.reshape(2, 4), sel, np.zeros(8, bool), 1.0)
+    with pytest.raises(ValueError, match="entries, expected"):
+        RoundPlan.create(sel, sel[:4], np.zeros(8, bool), 1.0)
+    with pytest.raises(ValueError, match="must be bool"):
+        RoundPlan(sel, sel, np.zeros(8, np.int32), 1.0).validate(8)
+    with pytest.raises(ValueError, match="required"):
+        RoundPlan(sel, None, np.zeros(8, bool), 1.0).validate(8)
+
+
+def test_roundplan_rejects_resume_outside_selection():
+    sel = _masks(8, 3)
+    resume = np.zeros(8, bool)
+    resume[7] = True
+    with pytest.raises(ValueError, match="subset"):
+        RoundPlan.create(sel, sel, resume, 1.0)
+
+
+def test_roundplan_optional_field_validation():
+    sel = _masks()
+    with pytest.raises(ValueError, match="steps_override"):
+        RoundPlan.create(sel, sel, np.zeros(8, bool), 1.0,
+                         steps_override=np.ones(8, np.float32))
+    with pytest.raises(ValueError, match="steps_override"):
+        RoundPlan.create(sel, sel, np.zeros(8, bool), 1.0,
+                         steps_override=np.full(8, -1, np.int32))
+    with pytest.raises(ValueError, match="agg_weights"):
+        RoundPlan.create(sel, sel, np.zeros(8, bool), 1.0,
+                         agg_weights=np.full(8, -0.5, np.float32))
+    with pytest.raises(ValueError, match="agg_weights"):
+        RoundPlan.create(sel, sel, np.zeros(8, bool), 1.0,
+                         agg_weights=np.full(4, 1.0, np.float32))
+    RoundPlan.create(sel, sel, np.zeros(8, bool), 1.0,
+                     steps_override=np.ones(8, np.int32),
+                     agg_weights=np.ones(8, np.float32))
+
+
+def test_roundplan_is_pytree():
+    import jax
+    sel = _masks()
+    p = RoundPlan.create(sel, sel, np.zeros(8, bool), 2.0)
+    leaves = jax.tree.leaves(p)
+    assert len(leaves) == 4            # None optionals drop out
+    p2 = jax.tree.map(lambda x: x, p)
+    assert isinstance(p2, RoundPlan) and float(p2.quorum) == 2.0
+
+
+def test_roundplan_validate_under_jit():
+    """Shape/dtype checks run on tracers; value checks skip gracefully."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def f(sel):
+        plan = RoundPlan(sel, sel, jnp.zeros_like(sel), 1.0)
+        plan.validate(8)
+        return plan.selected.sum()
+
+    assert int(f(jnp.ones(8, bool))) == 8
+
+
+# ---------------------------------------------------------------------------
+# SAFA zero-quorum fix
+# ---------------------------------------------------------------------------
+
+def test_safa_quorum_clamped_to_one():
+    """floor(0.75 * 1) == 0 used to idle-wait the whole deadline."""
+    n = 8
+    sim = SimConfig(num_clients=n, seed=0)
+    fl = FLConfig(num_clients=n, clients_per_round=1)
+    pol = SafaPolicy(sim, fl)
+    caches = core.init_caches({"w": np.zeros((2,), np.float32)}, n)
+    state = pol.init_state()
+    _, plan = pol.plan(state, RoundObservation(0, np.ones(n, bool), caches),
+                       None)
+    assert int(np.asarray(plan.selected).sum()) == 1
+    assert float(plan.quorum) == 1.0
+    plan.validate(n)
+
+
+# ---------------------------------------------------------------------------
+# History eval semantics
+# ---------------------------------------------------------------------------
+
+def test_history_eval_mask_skips_stale_entries():
+    h = History(acc=[0.1, 0.95, 0.95], wall_clock=[1.0, 2.0, 3.0],
+                comm_mb=[10.0, 20.0, 30.0],
+                eval_mask=[True, False, True])
+    # the stale (unevaluated) entry at t=2 must not be credited
+    assert h.time_to_accuracy(0.9) == 3.0
+    assert h.comm_to_accuracy(0.9) == 30.0
+    # no mask (legacy construction) -> every entry counts
+    h2 = History(acc=[0.1, 0.95], wall_clock=[1.0, 2.0],
+                 comm_mb=[10.0, 20.0])
+    assert h2.time_to_accuracy(0.9) == 2.0
+
+
+def test_engine_eval_every_records_mask():
+    n = 16
+    data = federated_classification(n, seed=0, n_per_client=32)
+    sim = SimConfig(num_clients=n, rounds=5, seed=0, local_steps=2)
+    fl = FLConfig(num_clients=n, clients_per_round=8)
+    h = FleetEngine(data, sim, fl).run("random", eval_every=2)
+    assert h.eval_mask == [True, False, True, False, True]
+    assert len(h.acc) == 5
+    # stale rounds carry the previous measured accuracy forward
+    assert h.acc[1] == h.acc[0] and h.acc[3] == h.acc[2]
+
+
+# ---------------------------------------------------------------------------
+# Engine behavior
+# ---------------------------------------------------------------------------
+
+def test_engine_runs_reproduce_and_reuse_trainer():
+    n = 16
+    data = federated_classification(n, seed=1, n_per_client=32)
+    sim = SimConfig(num_clients=n, rounds=3, seed=1, local_steps=2)
+    fl = FLConfig(num_clients=n, clients_per_round=6)
+    engine = FleetEngine(data, sim, fl)
+    h1 = engine.run("flude")
+    h2 = engine.run("flude")        # fresh fleet per run -> identical
+    np.testing.assert_allclose(h1.acc, h2.acc)
+    assert len(engine._server_steps) == 1     # compiled path reused
+    h3 = engine.run("random")
+    assert len(h3.acc) == 3
+
+
+def test_engine_accepts_policy_instance_and_rounds_cap():
+    n = 16
+    data = federated_classification(n, seed=1, n_per_client=32)
+    sim = SimConfig(num_clients=n, rounds=10, seed=1, local_steps=2)
+    fl = FLConfig(num_clients=n, clients_per_round=6)
+    engine = FleetEngine(data, sim, fl)
+    fleet = Fleet(sim)
+    pol = make_policy("safa", sim, fl, fleet)
+    h = engine.run(pol, rounds=4)
+    assert len(h.acc) == 4
+
+
+def test_engine_rejects_invalid_plans():
+    @register_policy("_test_bad_quorum")
+    class BadQuorum(Policy):
+        def plan(self, state, obs, rng):
+            n = self.fl_cfg.num_clients
+            sel = np.zeros(n, bool)
+            sel[0] = True
+            return state, RoundPlan(sel, sel, np.zeros(n, bool), 7.0)
+    try:
+        n = 16
+        data = federated_classification(n, seed=1, n_per_client=32)
+        sim = SimConfig(num_clients=n, rounds=2, seed=1, local_steps=2)
+        fl = FLConfig(num_clients=n, clients_per_round=6)
+        with pytest.raises(ValueError, match="exceeds the selected count"):
+            FleetEngine(data, sim, fl).run("_test_bad_quorum")
+    finally:
+        API._REGISTRY.pop("_test_bad_quorum", None)
+
+
+# ---------------------------------------------------------------------------
+# Cross-policy equivalence with the pre-refactor runner
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def golden_setup(golden):
+    g = golden
+    sim = SimConfig(num_clients=g["sim"]["num_clients"],
+                    rounds=g["sim"]["rounds"], seed=g["sim"]["seed"],
+                    local_steps=g["sim"]["local_steps"])
+    fl = FLConfig(num_clients=g["fl"]["num_clients"],
+                  clients_per_round=g["fl"]["clients_per_round"])
+    data = federated_classification(
+        g["sim"]["num_clients"], seed=g["data"]["seed"],
+        margin=g["data"]["margin"], noise=g["data"]["noise"],
+        n_per_client=g["data"]["n_per_client"])
+    return sim, fl, data
+
+
+@pytest.mark.parametrize("policy", BUILTINS)
+def test_matches_prerefactor_trajectory(golden, golden_setup, policy):
+    """Each ported policy reproduces the dict-era runner's History on a
+    fixed seed (golden recorded from the pre-refactor run_fl)."""
+    sim, fl, data = golden_setup
+    ref = golden["policies"][policy]
+    h = run_fl(policy, data, sim, fl)
+    np.testing.assert_allclose(h.acc, ref["acc"], atol=1e-6)
+    np.testing.assert_allclose(h.wall_clock, ref["wall_clock"], atol=1e-5)
+    np.testing.assert_allclose(h.comm_mb, ref["comm_mb"], atol=1e-5)
+    assert h.received == ref["received"]
+    assert h.selected == ref["selected"]
