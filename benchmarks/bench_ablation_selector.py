@@ -3,11 +3,40 @@
 The ablated variant is a registered policy — exactly the plug-in path a
 new scenario policy takes; no runner monkey-patching.
 """
+import functools
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, standard_setup, timed_run
+from repro import core
 from repro.fl import RoundPlan, register_policy
-from repro.fl.policies import FludePolicy
+from repro.fl.policies import FludePolicy, FludePolicyState
+
+
+@functools.lru_cache(maxsize=4)
+def _ablated_plan_jit(fl_cfg):
+    """Native FLUDE distribution (Eq. 4) + quorum rule, but over an
+    externally chosen selection — only Algorithm 1 is ablated."""
+
+    def fn(st, caches, sel):
+        stale = core.staleness(caches, st.round)
+        dist = core.plan_distribution(
+            st.distributor, sel, st.in_v, core.has_cache(caches), stale,
+            lam=fl_cfg.lam, mu=fl_cfg.mu, w_min=fl_cfg.w_min,
+            w_max=fl_cfg.w_max, mode=fl_cfg.distribution_mode)
+        r_sel = jnp.where(sel, core.dependability(st.belief), 0.0)
+        n_sel = jnp.maximum(sel.sum(), 1)
+        r_bar = r_sel.sum() / n_sel
+        cost = core.predicted_comm_cost(dist.distribute, sel, r_bar)
+        quorum = jnp.where(sel.sum() > 0,
+                           jnp.maximum(jnp.floor(sel.sum() * r_bar), 1.0),
+                           0.0)
+        return core.FludePlan(sel, dist.distribute, dist.resume, cost,
+                              quorum, r_bar, r_sel, dist.state)
+
+    return jax.jit(fn)
 
 
 @register_policy("flude_no_selector")
@@ -15,27 +44,26 @@ class FludeNoSelector(FludePolicy):
     """FLUDE with the device selector disabled: random selection, but
     caching + staleness-aware distribution still on."""
 
+    def __init__(self, sim_cfg, fl_cfg, fleet=None):
+        super().__init__(sim_cfg, fl_cfg, fleet)
+        self._abl_plan_jit = _ablated_plan_jit(fl_cfg)
+
     def plan(self, state, obs, rng):
-        state, plan = super().plan(state, obs, rng)
         N = self.fl_cfg.num_clients
         rs = np.random.RandomState(1000 + obs.rnd)
         sel = np.zeros(N, bool)
         idx = np.flatnonzero(obs.online)
         take = min(self.fl_cfg.clients_per_round, idx.size)
-        sel[rs.choice(idx, take, replace=False)] = True
-        # rebuild distribution decision for the random selection
-        stamp = np.asarray(obs.caches.round_stamp)
-        has = stamp >= 0
-        stale = np.where(has, obs.rnd - stamp, 1 << 20)
-        resume = sel & has & (stale <= float(
-            state.core.distributor.w_threshold))
-        # SAME quorum rule as native FLUDE (floor(|S|·R̄), R̄ straight from
-        # the FludePlan) so the ablation isolates the selector, not the
-        # round-termination rule
-        r_bar = float(state.last.avg_dependability)
-        quorum = max(np.floor(sel.sum() * r_bar), 1.0) if take else 0.0
-        return state, RoundPlan.create(sel, sel & ~resume, resume,
-                                       min(quorum, float(sel.sum())))
+        if take:
+            sel[rs.choice(idx, take, replace=False)] = True
+        # the FludePlan stored in state.last must describe THIS selection —
+        # the inherited observe() books Beta-belief successes/failures
+        # against state.last.selected, so it has to match the executed plan
+        p = self._abl_plan_jit(state.core, obs.caches, jnp.asarray(sel))
+        quorum = min(float(p.quorum), float(sel.sum()))
+        plan = RoundPlan.create(sel, np.asarray(p.distribute),
+                                np.asarray(p.resume), quorum)
+        return FludePolicyState(state.core, p), plan
 
 
 def run():
