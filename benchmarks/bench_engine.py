@@ -18,9 +18,18 @@ tests/test_policy_api.py.
 
 Fleet sizes N ∈ {256, 1024, 4096}; records results/benchmarks/
 BENCH_engine.json.
+
+``--mesh`` instead sweeps the client-mesh round path: forced host device
+counts 1/2/4/8 (each in a fresh subprocess so
+``--xla_force_host_platform_device_count`` lands before the jax import),
+recording sharded rounds/sec and the fused server step's peak live bytes
+with buffer donation on vs off, merged into the same JSON under "mesh".
 """
+import dataclasses
 import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -39,6 +48,8 @@ SIZES = (64, 256) if QUICK else (256, 1024, 4096)
 ROUNDS = 3 if QUICK else 5
 WARMUP = 1
 POLICY = "flude"
+MESH_DEVICES = (1, 2, 4, 8)
+N_MESH = 256 if QUICK else 4096
 
 
 def _setup(n):
@@ -158,11 +169,19 @@ def engine_loop(data, sim, fl, n_rounds):
 
 
 def run():
-    record = {"policy": POLICY, "rounds": ROUNDS,
-              "note": "host loop evals every round (old default), engine "
-                      "evals at boundaries; accs are sanity values, not "
-                      "an equivalence check (see tests/test_policy_api.py)",
-              "sizes": {}}
+    # read-merge so a previously recorded --mesh sweep survives a plain
+    # engine re-run (run_mesh() merges the other way for the same reason)
+    path = os.path.join(RESULTS, "BENCH_engine.json")
+    record = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            record = json.load(f)
+    record.update(
+        {"policy": POLICY, "rounds": ROUNDS,
+         "note": "host loop evals every round (old default), engine "
+                 "evals at boundaries; accs are sanity values, not "
+                 "an equivalence check (see tests/test_policy_api.py)",
+         "sizes": {}})
     for n in SIZES:
         sim, fl, data = _setup(n)
         acc_e, dt_e = engine_loop(data, sim, fl, WARMUP + ROUNDS)
@@ -179,7 +198,7 @@ def run():
              f"engine_rps={rps_e:.2f};host_rps={rps_h:.2f};"
              f"speedup={rps_e / rps_h:.2f}x")
     os.makedirs(RESULTS, exist_ok=True)
-    with open(os.path.join(RESULTS, "BENCH_engine.json"), "w") as f:
+    with open(path, "w") as f:
         json.dump(record, f, indent=1)
     emit("engine_summary", 0.0,
          f"max_speedup={max(v['speedup'] for v in record['sizes'].values()):.2f}x",
@@ -187,5 +206,79 @@ def run():
     return record
 
 
+def mesh_child(k: int):
+    """One forced-host-device-count measurement (runs in a subprocess).
+
+    The parent sets ``--xla_force_host_platform_device_count=k`` through
+    ``repro.launch.mesh.force_host_platform_device_count`` *before* this
+    module (and therefore jax) is imported.
+    """
+    sim, fl, data = _setup(N_MESH)
+    out = {"devices": k, "n": N_MESH, "policy": POLICY,
+           "rounds": ROUNDS, "donate": {}}
+    for donate in (False, True):
+        fl2 = dataclasses.replace(fl,
+                                  mesh_shape=(k,) if k > 1 else None,
+                                  donate_buffers=donate)
+        engine = FleetEngine(data, sim, fl2)
+        engine.run(POLICY, rounds=WARMUP, diagnostics=False)   # jit warmup
+        t0 = time.time()
+        engine.run(POLICY, rounds=ROUNDS, eval_every=ROUNDS,
+                   diagnostics=False)
+        dt = time.time() - t0
+        out["donate"]["on" if donate else "off"] = {
+            "rounds_per_sec": ROUNDS / dt,
+            **engine.server_step_memory(uses_cache=True)}
+    print(json.dumps(out))
+
+
+def run_mesh():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    sweep = []
+    for k in MESH_DEVICES:
+        code = ("from repro.launch.mesh import "
+                "force_host_platform_device_count as F; "
+                f"F({k}); "
+                "from benchmarks.bench_engine import mesh_child; "
+                f"mesh_child({k})")
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             cwd=root, capture_output=True, text=True,
+                             timeout=3600)
+        if out.returncode != 0:
+            raise RuntimeError(f"mesh child k={k} failed:\n"
+                               + out.stderr[-3000:])
+        rec = json.loads(out.stdout.strip().splitlines()[-1])
+        sweep.append(rec)
+        on, off = rec["donate"]["on"], rec["donate"]["off"]
+        emit(f"engine_mesh{k}", 1e6 / max(on["rounds_per_sec"], 1e-9),
+             f"rps_on={on['rounds_per_sec']:.2f};"
+             f"rps_off={off['rounds_per_sec']:.2f};"
+             f"peak_on={on['peak_live_bytes']};"
+             f"peak_off={off['peak_live_bytes']}")
+    path = os.path.join(RESULTS, "BENCH_engine.json")
+    record = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            record = json.load(f)
+    record["mesh"] = {
+        "policy": POLICY, "n": N_MESH, "rounds": ROUNDS,
+        "note": "forced host devices; donate on/off compared per device "
+                "count.  peak_live_bytes = argument+output+temp-alias of "
+                "the compiled fused server step (donation aliases the "
+                "previous global model + caches into the outputs)",
+        "sweep": sweep}
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
 if __name__ == "__main__":
-    run()
+    if "--mesh" in sys.argv[1:]:
+        run_mesh()
+    else:
+        run()

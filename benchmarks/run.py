@@ -8,6 +8,7 @@ import argparse
 import os
 import sys
 import traceback
+import types
 
 
 def main() -> None:
@@ -38,6 +39,9 @@ def main() -> None:
         "roofline": bench_roofline,
         "server_step": bench_server_step,
         "engine": bench_engine,
+        # client-mesh sweep (forced-host-device subprocesses, so it works
+        # from this single-device parent process)
+        "engine_mesh": types.SimpleNamespace(run=bench_engine.run_mesh),
     }
     print("name,us_per_call,derived")
     failed = []

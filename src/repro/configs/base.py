@@ -247,6 +247,15 @@ class FLConfig:
     agg_impl: str = "xla"              # xla | pallas | pallas_interpret
     agg_block_c: int = 8               # client-axis tile of the Pallas kernel
     agg_block_d: int = 2048            # packed-param-axis tile
+    # mesh & memory (cross-device round path)
+    mesh_shape: Optional[Tuple[int, ...]] = None
+    # ^ (k,) shards the fleet k-ways over the ("clients",) mesh axis
+    #   (stacked client pytree, packed (C, D) buffer, (N,) scalar state);
+    #   None = single-device round path (bit-identical to the golden runs)
+    donate_buffers: bool = False
+    # ^ donate dead round inputs on the jitted trainer / server_round_step
+    #   so XLA aliases them into the outputs (steady-state rounds allocate
+    #   nothing new); donated host-side handles are invalidated
 
 
 @dataclass(frozen=True)

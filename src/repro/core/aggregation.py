@@ -145,7 +145,8 @@ def fed_aggregate_packed(global_params: Any, client_params: Any,
                          weights: jax.Array,
                          layout: Optional[PackLayout] = None, *,
                          impl: str = "xla", block_c: int = 8,
-                         block_d: int = 2048) -> Any:
+                         block_d: int = 2048, mesh: Any = None,
+                         client_axis: str = "clients") -> Any:
     """Weighted average over the whole pytree in ONE aggregation call.
 
     Semantically identical to ``fed_aggregate(..., kernel=None)``: weights
@@ -154,15 +155,28 @@ def fed_aggregate_packed(global_params: Any, client_params: Any,
 
     impl: "xla" (einsum on the packed buffer), "pallas" (TPU kernel), or
     "pallas_interpret" (kernel in interpret mode — CPU CI).
+
+    With a ``mesh`` carrying a ``client_axis`` axis of size > 1 the packed
+    (C, D) buffer stays sharded over clients and aggregation runs as
+    per-shard partial weighted sums + one fp32 ``psum``
+    (``fed_agg_packed_sharded``); the impl switch is preserved per shard.
     """
-    from repro.kernels.fed_agg.ops import fed_agg_packed
+    from repro.kernels.fed_agg.ops import (fed_agg_packed,
+                                           fed_agg_packed_sharded)
+    from repro.sharding.partitioning import fleet_axis_size
 
     if layout is None:
         layout = pack_layout(global_params)
     buf = pack_stacked(client_params, layout)                # (C, D) fp32
     total = jnp.maximum(weights.sum(), 1e-30)
-    agg = fed_agg_packed(buf, (weights / total).astype(jnp.float32),
-                         impl=impl, block_c=block_c, block_d=block_d)
+    w_norm = (weights / total).astype(jnp.float32)
+    if mesh is not None and fleet_axis_size(mesh) > 1:
+        agg = fed_agg_packed_sharded(buf, w_norm, mesh=mesh,
+                                     axis=client_axis, impl=impl,
+                                     block_c=block_c, block_d=block_d)
+    else:
+        agg = fed_agg_packed(buf, w_norm, impl=impl, block_c=block_c,
+                             block_d=block_d)
     any_received = weights.sum() > 0
     # empty-round gate per leaf — avoids packing the global model just to
     # serve the nobody-reported fallback

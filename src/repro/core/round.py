@@ -17,6 +17,7 @@ call ``receive_quorum`` below for the cutoff count.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -118,7 +119,8 @@ def make_server_round_step(template_params, *, local_steps: int,
                            agg_impl: str = "xla",
                            staleness_discount: float = 1.0,
                            uses_cache: bool = True,
-                           block_c: int = 8, block_d: int = 2048):
+                           block_c: int = 8, block_d: int = 2048,
+                           mesh=None, donate: bool = False):
     """Build the fused per-round server step (one jit, zero host syncs).
 
     The returned callable runs everything the server does between "uploads
@@ -130,10 +132,23 @@ def make_server_round_step(template_params, *, local_steps: int,
     template_params: the *unstacked* global model pytree — fixes the packed
     (C, D) layout once.  ``uses_cache=False`` policies get an identity
     cache path (compiled out).
+
+    ``mesh``: optional fleet mesh with a ``clients`` axis — the packed
+    (C, D) buffer aggregates as per-shard partial sums + psum and the
+    cache bookkeeping stays sharded.  ``donate=True`` donates the previous
+    global model and the caches: every output (new global, new caches)
+    then aliases a donated input and the step allocates nothing persistent
+    — the packed (C, D) buffer lives only as jit-internal workspace.  The
+    stacked trainer outputs are deliberately NOT donated: the one stacked
+    output slot (new cache params) is already served by the donated
+    caches, so donating them could never alias and would only raise
+    jax's unusable-donation warning.  Donated host handles (the caller's
+    previous global/caches references) are invalidated by the call.
     """
     layout = AGG.pack_layout(template_params)
+    donate_argnums = (0, 1) if donate else ()
 
-    @jax.jit
+    @functools.partial(jax.jit, donate_argnums=donate_argnums)
     def server_round_step(global_params, caches: C.ClientCaches,
                           final_params, cache_params, cached_steps,
                           selected, fail, received, resume,
@@ -156,7 +171,7 @@ def make_server_round_step(template_params, *, local_steps: int,
             staleness_discount=staleness_discount) * extra_weights
         new_global = AGG.fed_aggregate_packed(
             global_params, final_params, w, layout, impl=agg_impl,
-            block_c=block_c, block_d=block_d)
+            block_c=block_c, block_d=block_d, mesh=mesh)
         if uses_cache:
             prior_steps = jnp.round(
                 caches.progress * local_steps).astype(jnp.int32)

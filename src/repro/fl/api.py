@@ -203,10 +203,13 @@ class Policy:
     waits_for_stragglers = True   # sync designs idle-wait to the deadline
 
     def __init__(self, sim_cfg: SimConfig, fl_cfg: FLConfig,
-                 fleet: Optional[Fleet] = None):
+                 fleet: Optional[Fleet] = None, mesh: Any = None):
         self.sim_cfg = sim_cfg
         self.fl_cfg = fl_cfg
         self.fleet = fleet
+        # fleet mesh ("clients" axis) the engine runs under — policies that
+        # keep (N,) device-resident state place it sharded over this
+        self.mesh = mesh
 
     def init_state(self) -> Any:
         return None
@@ -260,5 +263,5 @@ def available_policies():
 
 
 def make_policy(name: str, sim_cfg: SimConfig, fl_cfg: FLConfig,
-                fleet: Optional[Fleet] = None) -> Policy:
-    return get_policy(name)(sim_cfg, fl_cfg, fleet)
+                fleet: Optional[Fleet] = None, mesh: Any = None) -> Policy:
+    return get_policy(name)(sim_cfg, fl_cfg, fleet, mesh=mesh)

@@ -8,10 +8,22 @@ typed ``RoundPlan``/``RoundReport`` messages (see ``repro.fl.api``).
 Global params and client caches stay device-resident across rounds —
 the host only sees (N,)-sized masks/metadata each round, plus the test
 accuracy at eval/progress boundaries (``eval_every``).
+
+With ``FLConfig.mesh_shape`` set, the fleet lives *sharded* over a
+``("clients",)`` mesh axis: client training data, the stacked client
+pytree (caches + trainer outputs), the packed (C, D) aggregation buffer
+and every (N,) per-client array are placed with ``jax.device_put`` at
+engine construction and stay sharded across rounds; aggregation runs as
+per-shard partial weighted sums + one fp32 psum (shard_map).  The global
+model is replicated.  ``FLConfig.donate_buffers`` additionally donates
+the dead round inputs on the jitted trainer / server-step calls so XLA
+aliases them into the outputs and steady-state rounds allocate nothing
+new.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, List, Optional, Union
 
 import jax
@@ -25,7 +37,9 @@ from repro.fl import classifier as CLF
 from repro.fl.api import (Policy, RoundObservation, RoundPlan, RoundReport,
                           make_policy)
 from repro.fl import policies as _builtin_policies  # noqa: F401  (registers)
-from repro.fl.simulator import Fleet, SimConfig
+from repro.fl.simulator import Fleet, SimConfig, place_per_client
+from repro.launch.mesh import make_fleet_mesh
+from repro.sharding import partitioning as SP
 
 BIG = 1 << 20
 
@@ -34,17 +48,35 @@ BIG = 1 << 20
 # Vectorized local trainer
 # ---------------------------------------------------------------------------
 
-def make_trainer(sim_cfg: SimConfig, data: FederatedClassification):
+def make_trainer(sim_cfg: SimConfig, data: FederatedClassification,
+                 mesh=None, donate: bool = False):
+    """Build the jitted all-fleet local trainer.
+
+    ``mesh``: optional ``("clients",)`` fleet mesh — the per-client
+    training set (N, n, d)/(N, n) is placed sharded over clients so each
+    device trains only its own shard of the fleet (the computation is
+    embarrassingly parallel; the only broadcast input is the global
+    model).  ``donate=True`` donates the per-round (N,) step-count carry
+    (steps_needed) so its buffer is recycled into the (N,)-shaped
+    cached-steps output; the other big inputs — global model and caches —
+    are still live after the call (the server step reads them) and must
+    not be donated here.
+    """
     x_all = jnp.asarray(data.x)            # (N, n, d)
     y_all = jnp.asarray(data.y)            # (N, n)
+    if mesh is not None:
+        # the engine only builds a mesh that divides the fleet evenly
+        x_all = jax.device_put(x_all, SP.fleet_sharding(mesh, x_all.ndim))
+        y_all = jax.device_put(y_all, SP.fleet_sharding(mesh, y_all.ndim))
     n = x_all.shape[1]
     b = min(sim_cfg.batch_size, n)
     lr = sim_cfg.lr
     max_steps = sim_cfg.local_steps
 
     grad_fn = jax.vmap(jax.value_and_grad(CLF.clf_loss))
+    donate_argnums = (3,) if donate else ()
 
-    @jax.jit
+    @functools.partial(jax.jit, donate_argnums=donate_argnums)
     def train_all(global_params, caches, resume, steps_needed, stop_step,
                   cache_every):
         """All-fleet masked local training (incl. fused resume selection).
@@ -163,23 +195,109 @@ class FleetEngine:
         self.sim_cfg = sim_cfg
         self.fl_cfg = fl_cfg
         self._fleet = fleet
-        self.trainer = make_trainer(sim_cfg, data)
+        self.mesh = self._build_mesh(fl_cfg)
+        self.donate = bool(fl_cfg.donate_buffers)
+        self.trainer = make_trainer(sim_cfg, data, mesh=self.mesh,
+                                    donate=self.donate)
         self._acc_fn = jax.jit(CLF.clf_accuracy)
         self._server_steps = {}
-        self._template = CLF.init_classifier(
+        template = CLF.init_classifier(
             jax.random.key(sim_cfg.seed + 1), dim=data.x.shape[-1],
             num_classes=data.num_classes)
+        # place everything the rounds touch once, at construction: the
+        # global model + test set replicated, per-client arrays sharded
+        if self.mesh is not None:
+            template = jax.device_put(
+                template, jax.tree.map(
+                    lambda _: SP.replicated_sharding(self.mesh), template))
+        self._template = template
+        self._test_x, self._test_y, self._n_samples = self._place_eval()
+
+    def _build_mesh(self, fl_cfg: FLConfig):
+        if fl_cfg.mesh_shape is None:
+            return None
+        shape = tuple(fl_cfg.mesh_shape)
+        if len(shape) != 1:
+            raise ValueError(f"FLConfig.mesh_shape must be 1-D (clients "
+                             f"axis), got {shape}")
+        if shape[0] == 1:
+            return None          # single device: today's exact round path
+        if fl_cfg.num_clients % shape[0] != 0:
+            raise ValueError(
+                f"mesh_shape {shape} does not divide the "
+                f"{fl_cfg.num_clients}-client fleet — shard_map needs an "
+                f"even client split")
+        return make_fleet_mesh(shape[0])
+
+    def _place_eval(self):
+        test_x = jnp.asarray(self.data.test_x)
+        test_y = jnp.asarray(self.data.test_y)
+        n_samples = jnp.full((self.fl_cfg.num_clients,),
+                             self.data.x.shape[1], jnp.float32)
+        if self.mesh is not None:
+            rep = SP.replicated_sharding(self.mesh)
+            test_x = jax.device_put(test_x, rep)
+            test_y = jax.device_put(test_y, rep)
+            n_samples = jax.device_put(n_samples,
+                                       SP.fleet_sharding(self.mesh))
+        return test_x, test_y, n_samples
+
+    def _put1(self, arr):
+        """Place one (N,) per-client array (sharded under the mesh)."""
+        return place_per_client(arr, self.mesh)
 
     def _server_step(self, uses_cache: bool):
-        key = bool(uses_cache)
+        # keyed on mesh shape + donation so ``run(policy)`` reuse stays
+        # valid if the engine's placement knobs ever diverge per run
+        mesh_key = None if self.mesh is None else \
+            tuple(self.mesh.devices.shape)
+        key = (bool(uses_cache), mesh_key, self.donate)
         if key not in self._server_steps:
             self._server_steps[key] = core.make_server_round_step(
                 self._template, local_steps=self.sim_cfg.local_steps,
                 agg_impl=self.fl_cfg.agg_impl,
                 staleness_discount=self.fl_cfg.staleness_discount,
-                uses_cache=key, block_c=self.fl_cfg.agg_block_c,
-                block_d=self.fl_cfg.agg_block_d)
+                uses_cache=bool(uses_cache),
+                block_c=self.fl_cfg.agg_block_c,
+                block_d=self.fl_cfg.agg_block_d, mesh=self.mesh,
+                donate=self.donate)
         return self._server_steps[key]
+
+    def server_step_memory(self, uses_cache: bool = True) -> dict:
+        """Allocation profile of the compiled fused server step (bytes).
+
+        Lowers the step on representative round inputs and reads XLA's
+        memory analysis.  With ``donate_buffers`` the previous global
+        model + caches alias into the outputs (``alias_bytes`` > 0), so
+        the steady-state peak — arguments + outputs + temps − aliased —
+        drops by exactly the persistent fleet state the step no longer
+        double-buffers.
+        """
+        N = self.fl_cfg.num_clients
+        step = self._server_step(uses_cache)
+        caches = core.init_caches(self._template, N)
+        stacked = jax.tree.map(
+            lambda a: jnp.zeros((N,) + a.shape, a.dtype), self._template)
+        if self.mesh is not None:
+            caches = SP.place_fleet(caches, self.mesh, N)
+            stacked = SP.place_fleet(stacked, self.mesh, N)
+        mask = self._put1(np.zeros(N, bool))
+        steps_i = self._put1(np.zeros(N, np.int32))
+        ones = self._put1(np.ones(N, np.float32))
+        # lower() only traces — nothing executes, nothing is donated
+        lowered = step.lower(self._template, caches, stacked, stacked,
+                             steps_i, mask, mask, mask, mask,
+                             self._n_samples, ones, 0)
+        ma = lowered.compile().memory_analysis()
+        out = {"argument_bytes": int(ma.argument_size_in_bytes),
+               "output_bytes": int(ma.output_size_in_bytes),
+               "temp_bytes": int(ma.temp_size_in_bytes),
+               "alias_bytes": int(ma.alias_size_in_bytes)}
+        out["peak_live_bytes"] = (out["argument_bytes"]
+                                  + out["output_bytes"]
+                                  + out["temp_bytes"]
+                                  - out["alias_bytes"])
+        return out
 
     def run(self, policy: Union[str, Policy], rounds: Optional[int] = None,
             time_budget: Optional[float] = None, eval_every: int = 1,
@@ -194,17 +312,22 @@ class FleetEngine:
         sim_cfg, fl_cfg = self.sim_cfg, self.fl_cfg
         fleet = self._fleet if self._fleet is not None else Fleet(sim_cfg)
         if isinstance(policy, str):
-            policy = make_policy(policy, sim_cfg, fl_cfg, fleet)
+            policy = make_policy(policy, sim_cfg, fl_cfg, fleet,
+                                 mesh=self.mesh)
         state = policy.init_state()
         n_rounds = sim_cfg.rounds if rounds is None else rounds
 
         rng = jax.random.key(sim_cfg.seed)
         global_params = self._template
+        if self.donate:
+            # the first round's server step donates its global-model input;
+            # the template must survive for subsequent run() calls
+            global_params = jax.tree.map(jnp.copy, global_params)
         caches = core.init_caches(global_params, fl_cfg.num_clients)
-        test_x = jnp.asarray(self.data.test_x)
-        test_y = jnp.asarray(self.data.test_y)
-        n_samples = jnp.full((fl_cfg.num_clients,), self.data.x.shape[1],
-                             jnp.float32)
+        if self.mesh is not None:
+            caches = SP.place_fleet(caches, self.mesh, fl_cfg.num_clients)
+        test_x, test_y = self._test_x, self._test_y
+        n_samples = self._n_samples
 
         # adaptive cache frequency (C3): steps between cache writes
         cache_every_np = np.clip(np.round(
@@ -212,7 +335,7 @@ class FleetEngine:
                                          fleet.stability)), 1, 4
         ).astype(np.int32) if policy.uses_cache else \
             np.full(fl_cfg.num_clients, BIG, np.int32)
-        cache_every = jnp.asarray(cache_every_np)
+        cache_every = self._put1(cache_every_np)
 
         hist = History()
         cum_comm = 0.0
@@ -220,7 +343,7 @@ class FleetEngine:
         acc = float("nan")
         full_steps = np.full(fl_cfg.num_clients, sim_cfg.local_steps,
                              np.int32)
-        ones_w = jnp.ones((fl_cfg.num_clients,), jnp.float32)
+        ones_w = self._put1(np.ones((fl_cfg.num_clients,), np.float32))
         server_step = self._server_step(policy.uses_cache)
 
         for rnd in range(n_rounds):
@@ -263,8 +386,8 @@ class FleetEngine:
             # local training; the start state (fresh global vs cached
             # local) is selected on device inside the jitted trainer
             final, cache_p, cached_steps, losses = self.trainer(
-                global_params, caches, jnp.asarray(resume),
-                jnp.asarray(steps_needed), jnp.asarray(stop), cache_every)
+                global_params, caches, self._put1(resume),
+                self._put1(steps_needed), self._put1(stop), cache_every)
 
             # timing + round termination (Algorithm 2 lines 13–16)
             success = selected & ~fail & (steps_needed > 0)
@@ -289,11 +412,11 @@ class FleetEngine:
             # whole-model weighted aggregation, C3 cache write/clear —
             # one jitted call, params never leave the device.
             extra_w = ones_w if plan.agg_weights is None else \
-                jnp.asarray(plan.agg_weights, jnp.float32)
+                self._put1(np.asarray(plan.agg_weights, np.float32))
             global_params, caches = server_step(
                 global_params, caches, final, cache_p, cached_steps,
-                jnp.asarray(selected), jnp.asarray(fail),
-                jnp.asarray(received), jnp.asarray(resume),
+                self._put1(selected), self._put1(fail),
+                self._put1(received), self._put1(resume),
                 n_samples, extra_w, rnd)
 
             state = policy.observe(
@@ -330,4 +453,7 @@ class FleetEngine:
         for k, v in policy.history_extras(state).items():
             setattr(hist, k, v)
         hist.final_params = global_params
+        # final device-resident fleet state (stays sharded under the mesh;
+        # the seam for multi-round pipelining / warm restarts)
+        self._last_caches = caches
         return hist

@@ -28,6 +28,7 @@ import numpy as np
 from repro import core
 from repro.fl.api import (Policy, RoundObservation, RoundPlan, RoundReport,
                           register_policy)
+from repro.fl.simulator import place_per_client
 
 BIG = 1 << 20
 
@@ -66,17 +67,21 @@ def _flude_update_jit(fl_cfg):
 class FludePolicy(Policy):
     uses_cache = True
 
-    def __init__(self, sim_cfg, fl_cfg, fleet=None):
-        super().__init__(sim_cfg, fl_cfg, fleet)
-        # §4.1 optional: bias exploration toward charged/stable devices
+    def __init__(self, sim_cfg, fl_cfg, fleet=None, mesh=None):
+        super().__init__(sim_cfg, fl_cfg, fleet, mesh=mesh)
+        # §4.1 optional: bias exploration toward charged/stable devices.
+        # The product stays host-side fp64 (bit-identical to the golden
+        # runs); only the *placement* changes under a fleet mesh.
         self._hints = None
         if fleet is not None:
-            self._hints = jnp.asarray(fleet.battery * fleet.stability,
-                                      jnp.float32)
+            self._hints = place_per_client(
+                np.asarray(fleet.battery * fleet.stability, np.float32),
+                mesh)
         self._plan_jit = _flude_plan_jit(fl_cfg, self._hints is not None)
         self._update_jit = _flude_update_jit(fl_cfg)
         if self._hints is None:
-            self._hints = jnp.zeros((fl_cfg.num_clients,), jnp.float32)
+            self._hints = place_per_client(
+                np.zeros((fl_cfg.num_clients,), np.float32), mesh)
 
     def init_state(self) -> FludePolicyState:
         return FludePolicyState(core.init_state(self.fl_cfg), None)
@@ -133,8 +138,8 @@ class OortPolicy(Policy):
     """Oort [OSDI'21], simplified: statistical utility = loss·sqrt(n) with a
     system-speed penalty, ε-greedy exploration."""
 
-    def __init__(self, sim_cfg, fl_cfg, fleet=None):
-        super().__init__(sim_cfg, fl_cfg, fleet)
+    def __init__(self, sim_cfg, fl_cfg, fleet=None, mesh=None):
+        super().__init__(sim_cfg, fl_cfg, fleet, mesh=mesh)
         if fleet is None:
             raise ValueError("oort needs the fleet's speed profile")
         self.pref_duration = np.median(
@@ -188,8 +193,9 @@ class SafaPolicy(Policy):
     uses_cache = True
     quota = 0.75
 
-    def __init__(self, sim_cfg, fl_cfg, fleet=None, tau: int = 5):
-        super().__init__(sim_cfg, fl_cfg, fleet)
+    def __init__(self, sim_cfg, fl_cfg, fleet=None, mesh=None,
+                 tau: int = 5):
+        super().__init__(sim_cfg, fl_cfg, fleet, mesh=mesh)
         self.tau = tau
 
     def init_state(self) -> np.random.RandomState:
@@ -219,8 +225,8 @@ class FedSeaPolicy(Policy):
     local steps with device speed; deadline-based aggregation."""
     waits_for_stragglers = False
 
-    def __init__(self, sim_cfg, fl_cfg, fleet=None):
-        super().__init__(sim_cfg, fl_cfg, fleet)
+    def __init__(self, sim_cfg, fl_cfg, fleet=None, mesh=None):
+        super().__init__(sim_cfg, fl_cfg, fleet, mesh=mesh)
         if fleet is None:
             raise ValueError("fedsea needs the fleet's speed profile")
         rel = fleet.steps_per_sec / fleet.steps_per_sec.max()
@@ -240,6 +246,40 @@ class FedSeaPolicy(Policy):
         return state, RoundPlan.create(sel, sel, np.zeros(N, bool),
                                        float(sel.sum()),
                                        steps_override=self.steps)
+
+
+@register_policy("mifa")
+class MifaPolicy(Policy):
+    """MIFA [NeurIPS'21, arXiv 2106.04159], adapted: memorized-update FL
+    under arbitrary device unavailability.
+
+    MIFA's server keeps every client's most recent update and aggregates
+    *all* of them each round, stale or not, at full weight — that
+    unbiasedness under unavailability is the whole point.  In this engine
+    the memory is realized through the C3 cache machinery: every online
+    device trains (no subsampling), interrupted devices keep their local
+    progress cached and *always* resume it at the next opportunity, and the
+    policy cancels the server's staleness discount through ``agg_weights``
+    (``(1+s)^{+d}`` against the engine's ``(1+s)^{-d}``) so memorized
+    stale-base updates aggregate undiscounted — the memorized-update
+    stress test for the aggregation-weight machinery.
+    """
+    uses_cache = True
+    waits_for_stragglers = False
+
+    def init_state(self):
+        return None
+
+    def plan(self, state, obs, rng):
+        sel = obs.online.copy()
+        stamp = np.asarray(obs.caches.round_stamp)
+        resume = sel & (stamp >= 0)
+        # undo the engine's staleness discount on resumed (memorized) bases
+        stale = np.where(resume, np.maximum(obs.rnd - stamp, 0), 0)
+        w = np.power(1.0 + stale,
+                     self.fl_cfg.staleness_discount).astype(np.float32)
+        return state, RoundPlan.create(sel, sel & ~resume, resume,
+                                       float(sel.sum()), agg_weights=w)
 
 
 @register_policy("asyncfeded")

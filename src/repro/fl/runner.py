@@ -16,8 +16,8 @@ from repro.fl.api import (Policy, RoundObservation, RoundPlan,  # noqa: F401
                           register_policy)
 from repro.fl.engine import FleetEngine, History, make_trainer  # noqa: F401
 from repro.fl.policies import (AsyncFedEdPolicy, FedSeaPolicy,  # noqa: F401
-                               FludePolicy, OortPolicy, RandomPolicy,
-                               SafaPolicy)
+                               FludePolicy, MifaPolicy, OortPolicy,
+                               RandomPolicy, SafaPolicy)
 from repro.fl.simulator import Fleet, SimConfig
 
 

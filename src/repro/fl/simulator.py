@@ -16,6 +16,25 @@ from typing import Optional
 import numpy as np
 
 
+def place_per_client(arr, mesh=None):
+    """Host → device hand-off for one (N,) per-client array.
+
+    The simulator's numpy arrays stay the host-side source of truth (the
+    per-round draws are host RNG); everything that enters the jitted round
+    path goes through here so with a fleet mesh it lands already sharded
+    over the ``clients`` axis instead of being replicated and resharded
+    inside the jit.  jax imports are local — importing the simulator never
+    touches device state.
+    """
+    import jax
+    import jax.numpy as jnp
+    if mesh is None:
+        return jnp.asarray(np.asarray(arr))
+    from repro.sharding.partitioning import fleet_sharding
+    host = np.asarray(arr)
+    return jax.device_put(host, fleet_sharding(mesh, max(host.ndim, 1)))
+
+
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
     num_clients: int = 100

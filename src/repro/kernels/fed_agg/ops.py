@@ -5,6 +5,8 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.kernels.fed_agg.kernel import fed_agg_pallas
 from repro.kernels.fed_agg.ref import fed_agg_ref
@@ -46,3 +48,35 @@ def fed_agg_packed(updates: jnp.ndarray, weights: jnp.ndarray, *,
     return fed_agg_pallas(updates, weights, block_c=block_c,
                           block_d=block_d,
                           interpret=(impl == "pallas_interpret"))
+
+
+def fed_agg_packed_sharded(updates: jnp.ndarray, weights: jnp.ndarray, *,
+                           mesh: Mesh, axis: str = "clients",
+                           impl: str = "xla", block_c: int = 8,
+                           block_d: int = 2048) -> jnp.ndarray:
+    """``fed_agg_packed`` over a client-sharded (C, D) buffer -> (D,).
+
+    shard_map over the ``axis`` mesh axis: every device runs the chosen
+    single-device impl (xla einsum | pallas | pallas_interpret) on its
+    *local* (C/k, D) block of clients — the Pallas kernel therefore never
+    sees a partitioned operand, which GSPMD could not guarantee — and the
+    fp32 partial weighted sums combine with one ``psum``.  The result is
+    replicated (P()) so the surrounding unpack stays device-local.
+
+    Weights must already be normalized globally (Σw = 1 across ALL
+    clients); each shard contributes w_local · u_local unscaled.
+    """
+    if impl not in ("xla", "pallas", "pallas_interpret"):
+        raise ValueError(f"unknown fed_agg impl: {impl!r}")
+
+    def partial_sum(w_blk, u_blk):
+        # per-shard partial Σ_c w_c·u_c in fp32, then one cross-shard psum
+        part = fed_agg_packed(u_blk.astype(jnp.float32),
+                              w_blk.astype(jnp.float32), impl=impl,
+                              block_c=block_c, block_d=block_d)
+        return jax.lax.psum(part.astype(jnp.float32), axis)
+
+    return shard_map(partial_sum, mesh=mesh,
+                     in_specs=(P(axis), P(axis, None)),
+                     out_specs=P(),
+                     check_rep=False)(weights, updates)

@@ -1,8 +1,9 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST be the first two lines: the dry-run builds 512 placeholder host
-# devices so jax.make_mesh can realize the production meshes.  Smoke tests
-# and benchmarks never import this module and keep seeing 1 device.
+from repro.launch.mesh import force_host_platform_device_count
+force_host_platform_device_count(512)
+# ^ MUST be the first two lines (before any jax import): the dry-run builds
+# 512 placeholder host devices so jax.make_mesh can realize the production
+# meshes.  Smoke tests and benchmarks never import this module and keep
+# seeing 1 device.
 
 """Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
 
@@ -22,6 +23,7 @@ Usage:
 """
 import argparse
 import json
+import os
 import time
 import traceback
 

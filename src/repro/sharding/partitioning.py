@@ -136,6 +136,63 @@ def _axis_sizes(mesh: Mesh) -> dict:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 
+# ---------------------------------------------------------------------------
+# Fleet (cross-device) sharding: the ("clients",) mesh axis
+# ---------------------------------------------------------------------------
+
+CLIENT_AXIS = "clients"
+
+
+def fleet_axis_size(mesh: Optional[Mesh]) -> int:
+    """Size of the client axis (1 when no mesh / no such axis)."""
+    if mesh is None:
+        return 1
+    return _axis_sizes(mesh).get(CLIENT_AXIS, 1)
+
+
+def fleet_spec(ndim: int) -> P:
+    """PartitionSpec for one client-stacked array: shard dim 0 over
+    ``clients``, replicate the rest — (N,), (N, ...) and the packed
+    (C, D) buffer all use this."""
+    return P(CLIENT_AXIS, *([None] * (ndim - 1)))
+
+
+def fleet_sharding(mesh: Mesh, ndim: int = 1) -> NamedSharding:
+    return NamedSharding(mesh, fleet_spec(ndim))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def fleet_tree_shardings(tree, mesh: Mesh, num_clients: int):
+    """NamedSharding tree for client-stacked pytrees (leaves (N, ...)).
+
+    Every leaf whose leading dim equals ``num_clients`` shards over the
+    client axis; anything else (scalars, replicated globals) stays
+    replicated.  ``num_clients`` must divide the client-axis size times an
+    integer — uneven fleets fall back to replicated per leaf (pjit rejects
+    uneven argument shardings)."""
+    size = fleet_axis_size(mesh)
+
+    def one(leaf):
+        shape = getattr(leaf, "shape", ())
+        if shape and shape[0] == num_clients and num_clients % size == 0:
+            return fleet_sharding(mesh, len(shape))
+        return replicated_sharding(mesh)
+
+    return jax.tree.map(one, tree)
+
+
+def place_fleet(tree, mesh: Optional[Mesh], num_clients: int):
+    """``jax.device_put`` a client-stacked pytree onto the fleet mesh
+    (identity when ``mesh`` is None — the single-device path)."""
+    if mesh is None:
+        return jax.tree.map(jax.numpy.asarray, tree)
+    return jax.device_put(tree, fleet_tree_shardings(tree, mesh,
+                                                     num_clients))
+
+
 def _dp_size(mesh: Mesh) -> int:
     sizes = _axis_sizes(mesh)
     return int(np.prod([sizes[a] for a in fsdp_axes(mesh)] or [1]))

@@ -19,6 +19,8 @@ from repro.fl.policies import FludePolicy, SafaPolicy
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
                       "history_prerefactor.json")
+GOLDEN_MIFA = os.path.join(os.path.dirname(__file__), "golden",
+                           "history_mifa.json")
 BUILTINS = ("flude", "random", "oort", "safa", "fedsea", "asyncfeded")
 
 
@@ -27,7 +29,7 @@ BUILTINS = ("flude", "random", "oort", "safa", "fedsea", "asyncfeded")
 # ---------------------------------------------------------------------------
 
 def test_registry_has_builtins():
-    assert set(BUILTINS) <= set(available_policies())
+    assert set(BUILTINS) | {"mifa"} <= set(available_policies())
 
 
 def test_registry_roundtrip():
@@ -297,3 +299,48 @@ def test_matches_prerefactor_trajectory(golden, golden_setup, policy):
     np.testing.assert_allclose(h.comm_mb, ref["comm_mb"], atol=1e-5)
     assert h.received == ref["received"]
     assert h.selected == ref["selected"]
+
+
+# ---------------------------------------------------------------------------
+# MIFA memorized-update baseline (arXiv 2106.04159)
+# ---------------------------------------------------------------------------
+
+def test_mifa_matches_golden_trajectory(golden_setup):
+    """mifa reproduces its engine-recorded golden (same fixed-seed setup
+    as the six pre-refactor policies)."""
+    sim, fl, data = golden_setup
+    with open(GOLDEN_MIFA) as f:
+        ref = json.load(f)["history"]
+    h = run_fl("mifa", data, sim, fl)
+    np.testing.assert_allclose(h.acc, ref["acc"], atol=1e-6)
+    np.testing.assert_allclose(h.wall_clock, ref["wall_clock"], atol=1e-5)
+    np.testing.assert_allclose(h.comm_mb, ref["comm_mb"], atol=1e-5)
+    assert h.received == ref["received"]
+    assert h.selected == ref["selected"]
+
+
+def test_mifa_memorizes_and_undiscounts():
+    """mifa selects every online device, always resumes memorized local
+    state, and its agg_weights cancel the engine's staleness discount."""
+    from repro.fl.policies import MifaPolicy
+
+    n = 8
+    sim = SimConfig(num_clients=n, seed=0)
+    fl = FLConfig(num_clients=n, clients_per_round=4,
+                  staleness_discount=1.0)
+    pol = MifaPolicy(sim, fl)
+    caches = core.init_caches({"w": np.zeros((2,), np.float32)}, n)
+    stamp = np.full(n, -1, np.int32)
+    stamp[2] = 1                       # memorized update from round 1
+    caches = caches._replace(round_stamp=np.asarray(stamp))
+    online = np.ones(n, bool)
+    online[5] = False
+    _, plan = pol.plan(None, RoundObservation(4, online, caches), None)
+    sel = np.asarray(plan.selected)
+    assert (sel == online).all()                 # no subsampling
+    resume = np.asarray(plan.resume)
+    assert resume[2] and resume.sum() == 1       # memorized state resumes
+    w = np.asarray(plan.agg_weights)
+    # staleness 4-1=3 ⇒ weight (1+3)^{+d} cancels the engine's (1+3)^{-d}
+    assert w[2] == pytest.approx(4.0)
+    assert (w[online & ~resume] == 1.0).all()
