@@ -60,13 +60,14 @@ def _setup(n):
     return sim, fl, data
 
 
-def host_loop(data, sim, fl, n_rounds):
+def host_loop(data, sim, fl, n_rounds, fleet):
     """Per-round host round-trip of the server step (the old loop).
 
     FLUDE planning/bookkeeping run eagerly (op-by-op, as the dict-era
-    runner did) rather than through the policy's jitted plan path."""
+    runner did) rather than through the policy's jitted plan path.
+    ``fleet`` is constructed by the caller so every variant at a sweep
+    point runs on the same identically-seeded draw stream."""
     N = fl.num_clients
-    fleet = Fleet(sim)
     hints = jnp.asarray(fleet.battery * fleet.stability, jnp.float32)
     fstate = core.init_state(fl)
     trainer = make_trainer(sim, data)
@@ -159,8 +160,11 @@ def host_loop(data, sim, fl, n_rounds):
     return acc, time.time() - t_after_warmup
 
 
-def engine_loop(data, sim, fl, n_rounds):
-    engine = FleetEngine(data, sim, fl)
+def engine_loop(data, sim, fl, n_rounds, fleet):
+    # one shared fleet per sweep point: warmup advances the same stream
+    # the measured rounds continue, exactly like the host loop — the A/B
+    # variants see identical draws
+    engine = FleetEngine(data, sim, fl, fleet=fleet)
     engine.run(POLICY, rounds=WARMUP, diagnostics=False)    # jit warmup
     t0 = time.time()
     h = engine.run(POLICY, rounds=n_rounds - WARMUP,
@@ -184,8 +188,12 @@ def run():
          "sizes": {}})
     for n in SIZES:
         sim, fl, data = _setup(n)
-        acc_e, dt_e = engine_loop(data, sim, fl, WARMUP + ROUNDS)
-        acc_h, dt_h = host_loop(data, sim, fl, WARMUP + ROUNDS)
+        # identically-seeded fleet per variant: both loops consume the
+        # same warmup+measured draw sequence (A/B on one stream)
+        acc_e, dt_e = engine_loop(data, sim, fl, WARMUP + ROUNDS,
+                                  Fleet(sim))
+        acc_h, dt_h = host_loop(data, sim, fl, WARMUP + ROUNDS,
+                                Fleet(sim))
         rps_e = ROUNDS / dt_e
         rps_h = ROUNDS / dt_h
         record["sizes"][str(n)] = {
@@ -220,7 +228,9 @@ def mesh_child(k: int):
         fl2 = dataclasses.replace(fl,
                                   mesh_shape=(k,) if k > 1 else None,
                                   donate_buffers=donate)
-        engine = FleetEngine(data, sim, fl2)
+        # one identically-seeded fleet per variant: donate on/off compare
+        # on the same draw stream
+        engine = FleetEngine(data, sim, fl2, fleet=Fleet(sim))
         engine.run(POLICY, rounds=WARMUP, diagnostics=False)   # jit warmup
         t0 = time.time()
         engine.run(POLICY, rounds=ROUNDS, eval_every=ROUNDS,
@@ -277,8 +287,61 @@ def run_mesh():
     return record
 
 
+DYN_PATHS = (("host_rng", "bernoulli_host"),
+             ("device_bernoulli", "bernoulli"),
+             ("device_markov", "markov"))
+
+
+def run_dynamics():
+    """Host-RNG vs device-resident fleet-draw round paths, rounds/sec.
+
+    ``bernoulli_host`` draws every round on the host (numpy RNG + three
+    place_per_client uploads per round); the device processes produce the
+    draw, workload, failure and timing model in jitted dispatches with no
+    per-round host→device hand-off.  Same policy, same fleet size —
+    merged into BENCH_engine.json under "dynamics"."""
+    n = N_MESH
+    sim, fl, data = _setup(n)
+    paths = {}
+    for label, dyn in DYN_PATHS:
+        fl2 = dataclasses.replace(fl, dynamics=dyn)
+        engine = FleetEngine(data, sim, fl2, fleet=Fleet(sim))
+        engine.run(POLICY, rounds=WARMUP, diagnostics=False)  # jit warmup
+        t0 = time.time()
+        h = engine.run(POLICY, rounds=ROUNDS, eval_every=ROUNDS,
+                       diagnostics=False)
+        dt = time.time() - t0
+        paths[label] = {"dynamics": dyn, "rounds_per_sec": ROUNDS / dt,
+                        "final_acc": h.acc[-1]}
+        emit(f"engine_dyn_{label}", dt * 1e6 / ROUNDS,
+             f"n={n};rps={ROUNDS / dt:.2f}")
+    speedup = paths["device_bernoulli"]["rounds_per_sec"] \
+        / paths["host_rng"]["rounds_per_sec"]
+    path = os.path.join(RESULTS, "BENCH_engine.json")
+    record = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            record = json.load(f)
+    record["dynamics"] = {
+        "policy": POLICY, "n": n, "rounds": ROUNDS,
+        "device_over_host_speedup": speedup,
+        "note": "host_rng draws availability/failures on host numpy and "
+                "uploads (N,) masks per round; device paths produce the "
+                "draw + workload + timing on device (repro.fleet), no "
+                "per-round place_per_client",
+        "paths": paths}
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    emit("engine_dyn_summary", 0.0,
+         f"device_over_host={speedup:.2f}x", record=None)
+    return record
+
+
 if __name__ == "__main__":
     if "--mesh" in sys.argv[1:]:
         run_mesh()
+    elif "--dynamics" in sys.argv[1:]:
+        run_dynamics()
     else:
         run()

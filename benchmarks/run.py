@@ -42,6 +42,9 @@ def main() -> None:
         # client-mesh sweep (forced-host-device subprocesses, so it works
         # from this single-device parent process)
         "engine_mesh": types.SimpleNamespace(run=bench_engine.run_mesh),
+        # host-RNG vs device-resident fleet-draw paths (repro.fleet)
+        "engine_dynamics": types.SimpleNamespace(
+            run=bench_engine.run_dynamics),
     }
     print("name,us_per_call,derived")
     failed = []

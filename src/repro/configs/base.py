@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 
 # ---------------------------------------------------------------------------
@@ -256,6 +256,16 @@ class FLConfig:
     # ^ donate dead round inputs on the jitted trainer / server_round_step
     #   so XLA aliases them into the outputs (steady-state rounds allocate
     #   nothing new); donated host-side handles are invalidated
+    # fleet dynamics (repro.fleet): availability process + scenario params
+    dynamics: str = "bernoulli_host"
+    # ^ registered process name.  "bernoulli_host" is the seed simulator's
+    #   host-RNG path (bit-identical golden trajectories); every other
+    #   process draws on device under the client mesh — no per-round
+    #   host→device hand-off.  Scenario presets (repro.fleet.scenarios)
+    #   set this plus dynamics_params in one go.
+    dynamics_params: Tuple[Tuple[str, Any], ...] = ()
+    # ^ hashable ((key, value), ...) pairs forwarded to the process
+    #   constructor (e.g. (("mean_on", 5.0),) for markov churn)
 
 
 @dataclass(frozen=True)

@@ -5,3 +5,6 @@ from repro.fl.api import (Policy, RoundObservation, RoundPlan, RoundReport,
 from repro.fl.engine import FleetEngine, History, make_trainer
 from repro.fl import policies  # noqa: F401 — registers the built-ins
 from repro.fl.runner import run_fl
+from repro.fleet import (available_dynamics,  # noqa: F401 — re-exported
+                         available_scenarios, apply_scenario, get_dynamics,
+                         get_scenario, make_dynamics, register_dynamics)

@@ -169,10 +169,16 @@ class RoundObservation:
 
     ``caches`` stays device-resident — jnp-native policies (flude, safa)
     consume it directly; host-side policies pull the (N,) metadata only.
+    ``draw`` is the round's device-resident fleet draw when a
+    ``repro.fleet`` dynamics process produced it (None on the legacy
+    host-RNG path): jnp-native policies read ``draw.online`` /
+    ``draw.bandwidth`` / ``draw.battery`` directly instead of re-uploading
+    the host mask.
     """
     rnd: int
     online: np.ndarray
     caches: ClientCaches
+    draw: Optional[Any] = None
 
 
 for _cls, _data in ((RoundPlan, ["selected", "distribute", "resume",

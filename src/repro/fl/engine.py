@@ -38,6 +38,7 @@ from repro.fl.api import (Policy, RoundObservation, RoundPlan, RoundReport,
                           make_policy)
 from repro.fl import policies as _builtin_policies  # noqa: F401  (registers)
 from repro.fl.simulator import Fleet, SimConfig, place_per_client
+from repro.fleet import get_dynamics, make_dynamics  # registers processes
 from repro.launch.mesh import make_fleet_mesh
 from repro.sharding import partitioning as SP
 
@@ -49,7 +50,7 @@ BIG = 1 << 20
 # ---------------------------------------------------------------------------
 
 def make_trainer(sim_cfg: SimConfig, data: FederatedClassification,
-                 mesh=None, donate: bool = False):
+                 mesh=None, donate: bool = False, dynamics_features=None):
     """Build the jitted all-fleet local trainer.
 
     ``mesh``: optional ``("clients",)`` fleet mesh — the per-client
@@ -61,6 +62,16 @@ def make_trainer(sim_cfg: SimConfig, data: FederatedClassification,
     cached-steps output; the other big inputs — global model and caches —
     are still live after the call (the server step reads them) and must
     not be donated here.
+
+    ``dynamics_features``: a ``repro.fleet.FleetFeatures`` switches the
+    build to the device-resident dynamics variant: the round's workload
+    (steps from cache progress), exposure-scaled failures + interruption
+    points (from the ``FleetDraw`` variates) and the per-device timing
+    model are fused *into* the jitted trainer, so the whole round body is
+    one dispatch over device-resident inputs — nothing is drawn on the
+    host and nothing (N,)-sized is uploaded per round.  No argument is
+    donated on this variant (the draw is also exposed to policies via
+    ``RoundObservation`` and must stay live).
     """
     x_all = jnp.asarray(data.x)            # (N, n, d)
     y_all = jnp.asarray(data.y)            # (N, n)
@@ -74,23 +85,10 @@ def make_trainer(sim_cfg: SimConfig, data: FederatedClassification,
     max_steps = sim_cfg.local_steps
 
     grad_fn = jax.vmap(jax.value_and_grad(CLF.clf_loss))
-    donate_argnums = (3,) if donate else ()
+    donate_argnums = (3,) if donate and dynamics_features is None else ()
 
-    @functools.partial(jax.jit, donate_argnums=donate_argnums)
-    def train_all(global_params, caches, resume, steps_needed, stop_step,
-                  cache_every):
-        """All-fleet masked local training (incl. fused resume selection).
-
-        global_params: unstacked global model; each client starts from it
-                       unless ``resume`` picks its cached local state.
-        caches:       core.ClientCaches (stacked (N, ...) params).
-        resume:       (N,) bool — train from local cache (C3/C4).
-        steps_needed: (N,) steps each device must run this round (0 = idle).
-        stop_step:    (N,) interruption step (>= steps_needed: no failure).
-        cache_every:  (N,) cache interval in steps (C3 adaptive frequency).
-        Returns (final_params, cache_params, cached_steps, mean_loss).
-        """
-        start_params = core.resume_params(caches, global_params, resume)
+    def local_scan(start_params, steps_needed, stop_step, cache_every):
+        """The shared masked local-training scan body."""
         zero_cache = start_params
         loss0 = jnp.zeros((x_all.shape[0],), jnp.float32)
 
@@ -127,7 +125,67 @@ def make_trainer(sim_cfg: SimConfig, data: FederatedClassification,
         mean_loss = loss_sum / jnp.maximum(done, 1)
         return params, cache, cached_steps, mean_loss
 
-    return train_all
+    if dynamics_features is None:
+        @functools.partial(jax.jit, donate_argnums=donate_argnums)
+        def train_all(global_params, caches, resume, steps_needed,
+                      stop_step, cache_every):
+            """All-fleet masked local training (incl. fused resume
+            selection).
+
+            global_params: unstacked global model; each client starts from
+                           it unless ``resume`` picks its cached state.
+            caches:       core.ClientCaches (stacked (N, ...) params).
+            resume:       (N,) bool — train from local cache (C3/C4).
+            steps_needed: (N,) steps each device must run (0 = idle).
+            stop_step:    (N,) interruption step (>= steps_needed: no
+                          failure).
+            cache_every:  (N,) cache interval in steps (C3 adaptive).
+            Returns (final_params, cache_params, cached_steps, mean_loss).
+            """
+            start_params = core.resume_params(caches, global_params, resume)
+            return local_scan(start_params, steps_needed, stop_step,
+                              cache_every)
+
+        return train_all
+
+    feats = dynamics_features
+    model_mb = sim_cfg.model_mb
+
+    @jax.jit
+    def train_all_dyn(global_params, caches, draw, selected, distribute,
+                      resume, base_steps, cache_every):
+        """Dynamics round body: workload + failures + training + timing.
+
+        draw:       repro.fleet.FleetDraw for this round (device arrays).
+        selected/distribute/resume: (N,) bool plan masks.
+        base_steps: (N,) int planned steps before resume credit.
+        Returns (final_params, cache_params, cached_steps, mean_loss,
+        steps_needed, fail, success, times) — times in simulated seconds,
+        inf where the device never uploads.
+        """
+        prior = jnp.round(caches.progress * max_steps).astype(jnp.int32)
+        steps_needed = jnp.where(resume, jnp.maximum(base_steps - prior, 1),
+                                 base_steps)
+        steps_needed = jnp.where(selected, steps_needed, 0) \
+            .astype(jnp.int32)
+        fail = draw.failure_mask(steps_needed / max(max_steps, 1)) \
+            & selected
+        stop = jnp.where(fail, draw.interruption_step(steps_needed), BIG)
+        start_params = core.resume_params(caches, global_params, resume)
+        params, cache, cached_steps, mean_loss = local_scan(
+            start_params, steps_needed, stop, cache_every)
+        # timing model (Algorithm 2 lines 13–16) on the round's bandwidth
+        success = selected & ~fail & (steps_needed > 0)
+        completed = jnp.minimum(steps_needed, stop)
+        comm = model_mb * 8.0 / draw.bandwidth
+        t = jnp.where(distribute, comm, 0.0) \
+            + completed / feats.steps_per_sec \
+            + jnp.where(success, comm, 0.0)
+        times = jnp.where(success, t, jnp.inf)
+        return (params, cache, cached_steps, mean_loss, steps_needed, fail,
+                success, times)
+
+    return train_all_dyn
 
 
 # ---------------------------------------------------------------------------
@@ -176,9 +234,10 @@ class History:
 class FleetEngine:
     """Owns trainer + fused server step + fleet; runs policies by name.
 
-    Construction jits the fleet trainer once; ``run`` can then be called
-    repeatedly (different policies, same task) reusing the compiled round
-    path — the multi-policy comparison loop of the paper's Table 1.
+    The fleet trainer (legacy or dynamics variant, per
+    ``FLConfig.dynamics``) is jitted on first use and reused across
+    ``run`` calls (different policies, same task) — the multi-policy
+    comparison loop of the paper's Table 1.
 
         engine = FleetEngine(data, sim_cfg, fl_cfg)
         hist = engine.run("flude")                      # sim_cfg.rounds
@@ -197,8 +256,7 @@ class FleetEngine:
         self._fleet = fleet
         self.mesh = self._build_mesh(fl_cfg)
         self.donate = bool(fl_cfg.donate_buffers)
-        self.trainer = make_trainer(sim_cfg, data, mesh=self.mesh,
-                                    donate=self.donate)
+        self._trainer = None      # legacy trainer, built on first host run
         self._acc_fn = jax.jit(CLF.clf_accuracy)
         self._server_steps = {}
         template = CLF.init_classifier(
@@ -212,6 +270,13 @@ class FleetEngine:
                     lambda _: SP.replicated_sharding(self.mesh), template))
         self._template = template
         self._test_x, self._test_y, self._n_samples = self._place_eval()
+        # device-resident fleet dynamics (repro.fleet): jitted step /
+        # fused round trainer, memoized per (process, params); per-run
+        # (N,) constants are placed once and reused so steady-state
+        # rounds never re-upload anything
+        get_dynamics(fl_cfg.dynamics)          # fail fast on unknown names
+        self._dyn_cache = {}
+        self._round_consts = {}
 
     def _build_mesh(self, fl_cfg: FLConfig):
         if fl_cfg.mesh_shape is None:
@@ -241,6 +306,18 @@ class FleetEngine:
             n_samples = jax.device_put(n_samples,
                                        SP.fleet_sharding(self.mesh))
         return test_x, test_y, n_samples
+
+    @property
+    def trainer(self):
+        """The legacy (host-draw) jitted trainer, built lazily: an engine
+        configured with a device dynamics process never calls it, and the
+        dynamics trainer places its own copy of the training set — eager
+        construction would keep two full device copies of the data."""
+        if self._trainer is None:
+            self._trainer = make_trainer(self.sim_cfg, self.data,
+                                         mesh=self.mesh,
+                                         donate=self.donate)
+        return self._trainer
 
     def _put1(self, arr):
         """Place one (N,) per-client array (sharded under the mesh)."""
@@ -308,7 +385,14 @@ class FleetEngine:
         regime: faster policies (shorter rounds) fit more rounds in the
         same budget.  ``rounds`` (default ``sim_cfg.rounds``) remains the
         hard round cap.  ``diagnostics=False`` skips the O(N)-eval
-        end-of-run per-class/per-client accuracy sweep (benchmarks)."""
+        end-of-run per-class/per-client accuracy sweep (benchmarks).
+
+        ``FLConfig.dynamics`` picks the availability process: the default
+        ``bernoulli_host`` runs the seed simulator's host-RNG loop
+        (bit-identical golden trajectories); every other registered
+        process (``repro.fleet``) runs the device-resident loop — draws,
+        workload, failures and timing are produced on device, sharded
+        over the client mesh, with no per-round host→device hand-off."""
         sim_cfg, fl_cfg = self.sim_cfg, self.fl_cfg
         fleet = self._fleet if self._fleet is not None else Fleet(sim_cfg)
         if isinstance(policy, str):
@@ -326,7 +410,86 @@ class FleetEngine:
         caches = core.init_caches(global_params, fl_cfg.num_clients)
         if self.mesh is not None:
             caches = SP.place_fleet(caches, self.mesh, fl_cfg.num_clients)
-        test_x, test_y = self._test_x, self._test_y
+
+        hist = History()
+        rounds_loop = self._host_rounds \
+            if get_dynamics(fl_cfg.dynamics).host_side \
+            else self._device_rounds
+        state, global_params, caches = rounds_loop(
+            policy, state, fleet, hist, global_params, caches, rng,
+            n_rounds, time_budget, eval_every, progress)
+
+        # final diagnostics (paper Fig. 1(b)(c))
+        if diagnostics:
+            hist.per_class_acc = np.asarray(CLF.clf_per_class_accuracy(
+                global_params, self._test_x, self._test_y,
+                self.data.num_classes))
+            pc = []
+            for i in range(min(fl_cfg.num_clients, self.data.x.shape[0])):
+                pc.append(float(self._acc_fn(
+                    global_params, jnp.asarray(self.data.x[i]),
+                    jnp.asarray(self.data.y[i]))))
+            hist.per_client_acc = np.asarray(pc)
+        for k, v in policy.history_extras(state).items():
+            setattr(hist, k, v)
+        hist.final_params = global_params
+        # final device-resident fleet state (stays sharded under the mesh;
+        # the seam for multi-round pipelining / warm restarts)
+        self._last_caches = caches
+        return hist
+
+    # -- shared host-side round closing / bookkeeping -----------------------
+
+    def _close_round(self, times, plan, policy):
+        """Round termination (Algorithm 2 lines 13–16) on the per-device
+        finish times (host numpy, inf = never uploads); returns
+        ``(t_cut, duration)`` — shared by both round loops so the quorum
+        rule can never diverge between dynamics paths."""
+        sim_cfg = self.sim_cfg
+        quorum = int(np.ceil(plan.quorum))
+        finite = np.sort(times[np.isfinite(times)])
+        if finite.size >= quorum and quorum > 0:
+            t_cut = min(float(finite[quorum - 1]), sim_cfg.round_deadline)
+        elif not policy.waits_for_stragglers and finite.size > 0:
+            # async/semi-async designs close at the last arrival
+            t_cut = min(float(finite[-1]), sim_cfg.round_deadline)
+        else:
+            t_cut = sim_cfg.round_deadline
+        duration = t_cut if np.isfinite(t_cut) else sim_cfg.round_deadline
+        return t_cut, duration
+
+    def _book_round(self, hist, rnd, n_rounds, eval_every, global_params,
+                    distribute, received, selected, duration, cum_comm,
+                    cum_time, acc, progress):
+        """Comm/time accumulation, eval cadence and the History appends
+        for one round; returns the updated ``(cum_comm, cum_time, acc)``.
+        ``distribute``/``received``/``selected`` are host (N,) bools."""
+        cum_comm += (distribute.sum() + received.sum()) \
+            * self.sim_cfg.model_mb
+        cum_time += duration
+        evaluated = rnd % eval_every == 0 or rnd == n_rounds - 1
+        if evaluated:
+            acc = float(self._acc_fn(global_params, self._test_x,
+                                     self._test_y))
+        hist.acc.append(acc)
+        hist.eval_mask.append(evaluated)
+        hist.comm_mb.append(cum_comm)
+        hist.wall_clock.append(cum_time)
+        hist.received.append(int(received.sum()))
+        hist.selected.append(int(selected.sum()))
+        if progress and rnd % 10 == 0:
+            progress(rnd, acc, cum_comm, cum_time)
+        return cum_comm, cum_time, acc
+
+    # -- legacy host-RNG round loop (bernoulli_host) ------------------------
+
+    def _host_rounds(self, policy, state, fleet, hist, global_params,
+                     caches, rng, n_rounds, time_budget, eval_every,
+                     progress):
+        """The seed simulator's numpy round loop — draw-for-draw identical
+        to the pre-dynamics engine, so the golden trajectories of every
+        registered policy stay bit-identical."""
+        sim_cfg, fl_cfg = self.sim_cfg, self.fl_cfg
         n_samples = self._n_samples
 
         # adaptive cache frequency (C3): steps between cache writes
@@ -337,7 +500,6 @@ class FleetEngine:
             np.full(fl_cfg.num_clients, BIG, np.int32)
         cache_every = self._put1(cache_every_np)
 
-        hist = History()
         cum_comm = 0.0
         cum_time = 0.0
         acc = float("nan")
@@ -389,23 +551,13 @@ class FleetEngine:
                 global_params, caches, self._put1(resume),
                 self._put1(steps_needed), self._put1(stop), cache_every)
 
-            # timing + round termination (Algorithm 2 lines 13–16)
+            # timing + round termination
             success = selected & ~fail & (steps_needed > 0)
             completed = np.minimum(steps_needed, stop)
             times = fleet.round_times(steps_needed, distribute, completed,
                                       success)
-            quorum = int(np.ceil(plan.quorum))
-            finite = np.sort(times[np.isfinite(times)])
-            if finite.size >= quorum and quorum > 0:
-                t_cut = min(finite[quorum - 1], sim_cfg.round_deadline)
-            elif not policy.waits_for_stragglers and finite.size > 0:
-                # async/semi-async designs close at the last arrival
-                t_cut = min(finite[-1], sim_cfg.round_deadline)
-            else:
-                t_cut = sim_cfg.round_deadline
+            t_cut, duration = self._close_round(times, plan, policy)
             received = success & (times <= t_cut)
-            duration = t_cut if np.isfinite(t_cut) else \
-                sim_cfg.round_deadline
 
             # fused server step (§4.3 hot path): aggregation weights with
             # the staleness discount for stale BASE models, packed
@@ -425,35 +577,156 @@ class FleetEngine:
                             losses=np.asarray(losses), durations=times,
                             duration=duration, rnd=rnd))
 
-            cum_comm += (distribute.sum() + received.sum()) \
-                * sim_cfg.model_mb
-            cum_time += duration
-            evaluated = rnd % eval_every == 0 or rnd == n_rounds - 1
-            if evaluated:
-                acc = float(self._acc_fn(global_params, test_x, test_y))
-            hist.acc.append(acc)
-            hist.eval_mask.append(evaluated)
-            hist.comm_mb.append(cum_comm)
-            hist.wall_clock.append(cum_time)
-            hist.received.append(int(received.sum()))
-            hist.selected.append(int(selected.sum()))
-            if progress and rnd % 10 == 0:
-                progress(rnd, acc, cum_comm, cum_time)
+            cum_comm, cum_time, acc = self._book_round(
+                hist, rnd, n_rounds, eval_every, global_params, distribute,
+                received, selected, duration, cum_comm, cum_time, acc,
+                progress)
 
-        # final diagnostics (paper Fig. 1(b)(c))
-        if diagnostics:
-            hist.per_class_acc = np.asarray(CLF.clf_per_class_accuracy(
-                global_params, test_x, test_y, self.data.num_classes))
-            pc = []
-            for i in range(min(fl_cfg.num_clients, self.data.x.shape[0])):
-                pc.append(float(self._acc_fn(
-                    global_params, jnp.asarray(self.data.x[i]),
-                    jnp.asarray(self.data.y[i]))))
-            hist.per_client_acc = np.asarray(pc)
-        for k, v in policy.history_extras(state).items():
-            setattr(hist, k, v)
-        hist.final_params = global_params
-        # final device-resident fleet state (stays sharded under the mesh;
-        # the seam for multi-round pipelining / warm restarts)
-        self._last_caches = caches
-        return hist
+        return state, global_params, caches
+
+    # -- device-resident dynamics round loop (repro.fleet) ------------------
+
+    def _dynamics_fns(self, fleet):
+        """Memoized device-dynamics artifacts for the configured process:
+        (process, jitted init, jitted step, fused dynamics trainer, jitted
+        receive cut).  The jitted step applies the fleet sharding
+        constraint so draws stay sharded over the client mesh no matter
+        what the process body produced."""
+        key = (self.fl_cfg.dynamics, self.fl_cfg.dynamics_params)
+        if key not in self._dyn_cache:
+            N = self.fl_cfg.num_clients
+            mesh = self.mesh
+            feats = fleet.features(mesh)
+            process = make_dynamics(self.fl_cfg.dynamics, self.sim_cfg,
+                                    features=feats, mesh=mesh,
+                                    params=self.fl_cfg.dynamics_params)
+
+            def step(fstate, k):
+                s, d = process.step(fstate, k)
+                return (SP.fleet_constraint(s, mesh, N),
+                        SP.fleet_constraint(d, mesh, N))
+
+            init_fn = jax.jit(lambda k: SP.fleet_constraint(
+                process.init_state(k), mesh, N))
+            trainer = make_trainer(self.sim_cfg, self.data, mesh=mesh,
+                                   dynamics_features=feats)
+            received_fn = jax.jit(
+                lambda success, times, cut: success & (times <= cut))
+            self._dyn_cache[key] = (process, init_fn, jax.jit(step),
+                                    trainer, received_fn)
+        return self._dyn_cache[key]
+
+    def _dyn_consts(self, fleet, uses_cache):
+        """Per-run (N,) constants, placed once and reused across runs —
+        steady-state dynamics rounds upload nothing."""
+        key = ("cache_every", bool(uses_cache))
+        if key not in self._round_consts:
+            N = self.fl_cfg.num_clients
+            ce = np.clip(np.round(core.adaptive_cache_interval(
+                2.0, fleet.battery, fleet.stability)), 1, 4
+            ).astype(np.int32) if uses_cache else np.full(N, BIG, np.int32)
+            self._round_consts[key] = self._put1(ce)
+        if "ones" not in self._round_consts:
+            N = self.fl_cfg.num_clients
+            self._round_consts["ones"] = self._put1(
+                np.ones(N, np.float32))
+            self._round_consts["full_steps"] = self._put1(
+                np.full(N, self.sim_cfg.local_steps, np.int32))
+        return (self._round_consts[key], self._round_consts["ones"],
+                self._round_consts["full_steps"])
+
+    def _from_plan(self, arr, dtype=None):
+        """One (N,) plan field onto the fleet.  Device-native plans
+        (flude) pass through untouched; host-side policy arrays cost one
+        upload — the *draws* are device-resident either way."""
+        if isinstance(arr, jax.Array):
+            return arr
+        return self._put1(np.asarray(arr) if dtype is None
+                          else np.asarray(arr, dtype))
+
+    def _device_rounds(self, policy, state, fleet, hist, global_params,
+                       caches, rng, n_rounds, time_budget, eval_every,
+                       progress):
+        """Dynamics round loop: the round's availability/failure draw,
+        workload, local training and timing model run on device (sharded
+        over the client mesh) in two jitted dispatches (process step +
+        fused trainer) plus the fused server step.  The host only *reads*
+        (N,) masks and times back for planning, the quorum cut and
+        bookkeeping — nothing per-round is uploaded through
+        ``place_per_client``."""
+        sim_cfg, fl_cfg = self.sim_cfg, self.fl_cfg
+        n_samples = self._n_samples
+        process, init_fn, step_fn, trainer, received_fn = \
+            self._dynamics_fns(fleet)
+        cache_every, ones_w, full_steps = self._dyn_consts(
+            fleet, policy.uses_cache)
+        server_step = self._server_step(policy.uses_cache)
+
+        # independent dynamics key stream, reproducible per run
+        dyn_base = jax.random.fold_in(jax.random.key(sim_cfg.seed),
+                                      0x0F1EE7)
+        fstate = init_fn(jax.random.fold_in(dyn_base, 1 << 20))
+
+        cum_comm = 0.0
+        cum_time = 0.0
+        acc = float("nan")
+        draw = None
+        for rnd in range(n_rounds):
+            if time_budget is not None and cum_time >= time_budget:
+                break
+            rng, k_sel = jax.random.split(rng)
+            fstate, draw = step_fn(fstate,
+                                   jax.random.fold_in(dyn_base, rnd))
+            state, plan = policy.plan(
+                state, RoundObservation(rnd, np.asarray(draw.online),
+                                        caches, draw=draw), k_sel)
+            if getattr(plan, "_validated", False):
+                if plan.selected.shape[0] != fl_cfg.num_clients:
+                    raise ValueError(
+                        f"RoundPlan sized {plan.selected.shape[0]} for a "
+                        f"{fl_cfg.num_clients}-client fleet")
+            else:
+                plan.validate(fl_cfg.num_clients)
+            sel_d = self._from_plan(plan.selected)
+            dist_d = self._from_plan(plan.distribute)
+            res_d = self._from_plan(plan.resume)
+            base_steps = full_steps if plan.steps_override is None else \
+                self._from_plan(plan.steps_override, np.int32)
+
+            # fused round body: workload + failure/interruption +
+            # masked local training + per-device timing, one dispatch
+            (final, cache_p, cached_steps, losses, steps_needed, fail,
+             success, times) = trainer(global_params, caches, draw, sel_d,
+                                       dist_d, res_d, base_steps,
+                                       cache_every)
+
+            # round termination on the device-computed times; the cut is
+            # a host scalar, the receive mask stays on device
+            times_h = np.asarray(times)
+            t_cut, duration = self._close_round(times_h, plan, policy)
+            received = received_fn(success, times, t_cut)
+
+            extra_w = ones_w if plan.agg_weights is None else \
+                self._from_plan(plan.agg_weights, np.float32)
+            global_params, caches = server_step(
+                global_params, caches, final, cache_p, cached_steps,
+                sel_d, fail, received, res_d, n_samples, extra_w, rnd)
+
+            received_h = np.asarray(received)
+            state = policy.observe(
+                state, plan,
+                RoundReport(received=received_h, fail=np.asarray(fail),
+                            losses=np.asarray(losses), durations=times_h,
+                            duration=duration, rnd=rnd))
+
+            cum_comm, cum_time, acc = self._book_round(
+                hist, rnd, n_rounds, eval_every, global_params,
+                np.asarray(plan.distribute), received_h,
+                np.asarray(plan.selected), duration, cum_comm, cum_time,
+                acc, progress)
+
+        # pipelining seam: the process state (and last draw) stay
+        # device-resident between runs, like the caches
+        self._last_fleet_state = fstate
+        self._last_draw = draw
+        return state, global_params, caches

@@ -87,15 +87,22 @@ class FludePolicy(Policy):
         return FludePolicyState(core.init_state(self.fl_cfg), None)
 
     def plan(self, state, obs: RoundObservation, rng):
-        p = self._plan_jit(state.core, obs.caches,
-                           jnp.asarray(obs.online), rng, self._hints)
-        selected = np.asarray(p.selected)
-        quorum = min(float(p.quorum), float(selected.sum()))
-        plan = RoundPlan.create(selected, np.asarray(p.distribute),
-                                np.asarray(p.resume), quorum)
+        # with a device-resident fleet draw the online mask never leaves
+        # the device; the legacy host path re-uploads the numpy mask
+        online = obs.draw.online if obs.draw is not None \
+            else jnp.asarray(obs.online)
+        p = self._plan_jit(state.core, obs.caches, online, rng, self._hints)
+        quorum = min(float(p.quorum), float(p.selected.sum()))
+        # masks stay jax arrays: the engine's device round path consumes
+        # them in place, and the host path's np.asarray sees equal values
+        plan = RoundPlan.create(p.selected, p.distribute, p.resume, quorum)
         return FludePolicyState(state.core, p), plan
 
     def observe(self, state, plan, report: RoundReport):
+        # under correlated dynamics (markov/sessions/trace) the received
+        # mask folds *correlated* outcomes into the Beta dependability
+        # beliefs (Eq. 1) — the posterior tracks the realized process,
+        # not an i.i.d. idealization; the update rule is unchanged
         new_core = self._update_jit(state.core, state.last,
                                     jnp.asarray(report.received))
         return FludePolicyState(new_core, None)

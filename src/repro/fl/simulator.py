@@ -7,6 +7,15 @@ Mirrors the paper's experimental setup (§5.2):
     per-device online rate in [0.2, 0.8];
   * heterogeneous compute speeds (three device tiers, like Reno/Find/A
     phones and TX2/NX/AGX Jetsons) and WiFi bandwidths (1–30 Mb/s).
+
+Role within the fleet-dynamics subsystem (``repro.fleet``): ``Fleet`` is
+the *population sampler* — its static per-device arrays seed
+``FleetFeatures`` (see :meth:`Fleet.features`) for every registered
+availability process — while its per-round draw methods
+(``online_mask``/``failure_draw``/``failure_step``) remain the
+``bernoulli_host`` process: the host-RNG path the golden trajectories
+pin bit-for-bit.  Device-resident processes (markov, sessions, trace)
+replace only the draws, never the population.
 """
 from __future__ import annotations
 
@@ -89,6 +98,14 @@ class Fleet:
         self.battery = rng.uniform(0.2, 1.0, N)
         self.stability = rng.uniform(0.3, 1.0, N)
         self._rng = rng
+
+    def features(self, mesh=None):
+        """Device-resident ``repro.fleet.FleetFeatures`` of this
+        population (placed sharded over the client mesh when given) —
+        the one-time host→device hand-off every dynamics process draws
+        its static per-device parameters from."""
+        from repro.fleet import FleetFeatures
+        return FleetFeatures.from_fleet(self, mesh)
 
     # -- per-round draws ----------------------------------------------------
     def online_mask(self) -> np.ndarray:

@@ -1,0 +1,21 @@
+"""Device-resident fleet dynamics: availability processes, traces,
+scenarios.
+
+The typed ``init_state``/``step`` process API lives in
+``repro.fleet.api``; importing this package registers the built-in
+processes (``bernoulli_host``, ``bernoulli``, ``markov``, ``sessions``,
+``trace``) and the named scenario presets.
+"""
+from repro.fleet.api import (DynamicsProcess, FleetDraw, FleetFeatures,
+                             FleetState, availability_summary,
+                             available_dynamics, get_dynamics,
+                             make_dynamics, register_dynamics,
+                             simulate_availability)
+from repro.fleet import processes  # noqa: F401 — registers the built-ins
+from repro.fleet import traces  # noqa: F401 — registers trace replay
+from repro.fleet.traces import TraceProcess, synthesize_trace
+from repro.fleet.processes import (BernoulliHostProcess, BernoulliProcess,
+                                   MarkovProcess, SessionsProcess)
+from repro.fleet.scenarios import (Scenario, apply_scenario,
+                                   available_scenarios, get_scenario,
+                                   register_scenario)

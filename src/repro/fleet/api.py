@@ -1,0 +1,268 @@
+"""Typed fleet-dynamics process API: FleetState/FleetDraw + a registry.
+
+FLUDE's premise is that device behavior follows *structured* probability
+distributions over time (paper §3–4), but the seed simulator only drew
+memoryless i.i.d. Bernoulli masks on the host.  This module defines the
+device-resident alternative, mirroring the typed policy API of
+``repro.fl.api``:
+
+* ``FleetFeatures`` — the static per-device population (undependability,
+  online rate, compute speed, bandwidth, battery, stability), placed on
+  device (sharded over the ``("clients",)`` mesh axis) once;
+* ``FleetState``    — a pytree threaded through rounds: a replicated round
+  clock ``t`` plus a process-specific ``slot`` (Markov on/off bits,
+  semi-Markov session clocks, a trace cursor, ...);
+* ``FleetDraw``     — what one round's stochastic draw exposes to the
+  engine: online mask, failure variates (mask at any work fraction via
+  ``failure_mask``), interruption point (``interruption_step``),
+  bandwidth and battery;
+* ``DynamicsProcess`` — ``init_state(key)``/``step(state, key)`` pure
+  transitions; ``step`` is jitted by the engine and must be traceable.
+
+Failure coupling: a process emits one uniform variate ``fail_u`` and a
+per-round full-exposure failure probability ``fail_p``.  The mask at work
+fraction ``w`` is ``fail_u < 1 - (1 - fail_p)**w`` — monotone in ``w``, so
+a single variate yields a consistent failure decision for every exposure
+the planner might choose (the §4.2 resumed-devices-are-safer rule), and
+the draw itself never has to wait for the plan.
+
+Processes plug in through a decorator registry::
+
+    @register_dynamics("my-process")
+    class MyProcess(DynamicsProcess):
+        ...
+
+and are instantiated by name via ``make_dynamics`` /
+``FLConfig.dynamics`` — no engine edits needed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Static population features
+# ---------------------------------------------------------------------------
+
+class FleetFeatures(NamedTuple):
+    """Static per-device arrays, device-resident (each (N,) float32)."""
+    undep: jax.Array           # full-exposure failure probability
+    online_rate: jax.Array     # long-run availability target in [0.2, 0.8]
+    steps_per_sec: jax.Array   # compute speed (device tier)
+    bandwidth: jax.Array       # WiFi bandwidth, megabits/s
+    battery: jax.Array         # [0, 1]
+    stability: jax.Array       # [0, 1] network stability
+
+    @classmethod
+    def from_fleet(cls, fleet, mesh=None) -> "FleetFeatures":
+        """Place the legacy numpy ``Fleet`` population on device (sharded
+        over the client mesh axis when one is given).  One-time hand-off —
+        per-round draws never touch the host again."""
+        from repro.fl.simulator import place_per_client
+
+        def put(a):
+            return place_per_client(np.asarray(a, np.float32), mesh)
+
+        return cls(undep=put(fleet.undep), online_rate=put(fleet.online_rate),
+                   steps_per_sec=put(fleet.steps_per_sec),
+                   bandwidth=put(fleet.bandwidth), battery=put(fleet.battery),
+                   stability=put(fleet.stability))
+
+    @property
+    def num_clients(self) -> int:
+        return self.undep.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Round state / draw pytrees
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FleetState:
+    """Fleet-dynamics carry: a replicated round clock + process slot."""
+    t: Any                     # scalar int32 round counter
+    slot: Any = ()             # process-specific pytree ((N,)-leading leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetDraw:
+    """One round's stochastic fleet draw (all (N,) arrays, device-side).
+
+    ``online`` is the availability mask; ``fail_p``/``fail_u`` encode the
+    failure decision at any exposure (see module docstring); ``stop_u``
+    places the interruption point uniformly within the planned steps;
+    ``bandwidth``/``battery`` feed the timing model and caching policy.
+    """
+    online: Any                # (N,) bool
+    fail_p: Any                # (N,) float32 — full-exposure failure prob
+    fail_u: Any                # (N,) float32 — failure coupling variate
+    stop_u: Any                # (N,) float32 — interruption position variate
+    bandwidth: Any             # (N,) float32 — megabits/s this round
+    battery: Any               # (N,) float32
+
+    @property
+    def fail(self):
+        """Failure mask at full exposure (work_frac == 1)."""
+        return self.fail_u < self.fail_p
+
+    def failure_mask(self, work_frac):
+        """Exposure-scaled failure: P = 1 - (1 - p)^work_frac (§4.2)."""
+        w = jnp.clip(work_frac, 0.0, 1.0)
+        p = 1.0 - jnp.power(1.0 - self.fail_p, w)
+        return self.fail_u < p
+
+    def interruption_step(self, steps):
+        """Uniform interruption point within each device's planned steps."""
+        return jnp.floor(self.stop_u * jnp.maximum(steps, 1)).astype(
+            jnp.int32)
+
+
+for _cls, _data in ((FleetState, ["t", "slot"]),
+                    (FleetDraw, ["online", "fail_p", "fail_u", "stop_u",
+                                 "bandwidth", "battery"])):
+    jax.tree_util.register_dataclass(_cls, data_fields=_data, meta_fields=[])
+
+
+# ---------------------------------------------------------------------------
+# Process protocol
+# ---------------------------------------------------------------------------
+
+class DynamicsProcess:
+    """Fleet-dynamics process: static config + pure state transitions.
+
+    ``init_state(key)`` builds the ``FleetState`` carry; ``step(state,
+    key)`` maps it to ``(state', FleetDraw)`` and must be pure and
+    jittable — the engine jits it once (with the fleet sharding
+    constraint applied under a client mesh) and calls it every round with
+    a per-round folded key.  ``host_side=True`` marks legacy processes
+    whose draws come from the host RNG (``bernoulli_host``); the engine
+    routes those through the historical numpy round path instead.
+    """
+    name = "base"
+    host_side = False
+
+    def __init__(self, sim_cfg, features: Optional[FleetFeatures] = None,
+                 fleet=None, mesh=None, **params):
+        if features is None:
+            if fleet is None:
+                raise ValueError(
+                    f"dynamics process {self.name!r} needs FleetFeatures "
+                    f"(or a Fleet to derive them from)")
+            features = FleetFeatures.from_fleet(fleet, mesh)
+        self.sim_cfg = sim_cfg
+        self.features = features
+        self.mesh = mesh
+        self.params = dict(params)
+
+    @property
+    def num_clients(self) -> int:
+        return self.features.num_clients
+
+    def init_state(self, key) -> FleetState:
+        return FleetState(t=jnp.int32(0))
+
+    def step(self, state: FleetState, key) -> Tuple[FleetState, FleetDraw]:
+        raise NotImplementedError
+
+    # -- shared draw plumbing ----------------------------------------------
+    def _base_draw(self, key, online, fail_p=None, bandwidth=None,
+                   battery=None) -> FleetDraw:
+        """Fill the coupling variates + defaults around a process's
+        online mask (and optional overrides)."""
+        f = self.features
+        k_fail, k_stop = jax.random.split(key)
+        n = (self.num_clients,)
+        return FleetDraw(
+            online=online,
+            fail_p=f.undep if fail_p is None else fail_p,
+            fail_u=jax.random.uniform(k_fail, n),
+            stop_u=jax.random.uniform(k_stop, n),
+            bandwidth=f.bandwidth if bandwidth is None else bandwidth,
+            battery=f.battery if battery is None else battery)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[DynamicsProcess]] = {}
+
+
+def register_dynamics(name: str, *, allow_override: bool = False):
+    """Class decorator: ``@register_dynamics("markov")`` makes the process
+    constructible by name through ``make_dynamics`` /
+    ``FLConfig.dynamics``."""
+    def deco(cls: Type[DynamicsProcess]) -> Type[DynamicsProcess]:
+        if not (isinstance(cls, type)
+                and issubclass(cls, DynamicsProcess)):
+            raise TypeError(f"@register_dynamics expects a DynamicsProcess "
+                            f"subclass, got {cls!r}")
+        if name in _REGISTRY and not allow_override:
+            raise ValueError(f"dynamics {name!r} already registered "
+                             f"(pass allow_override=True to replace)")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def get_dynamics(name: str) -> Type[DynamicsProcess]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown dynamics {name!r}; registered: "
+                       f"{', '.join(available_dynamics())}") from None
+
+
+def available_dynamics():
+    return sorted(_REGISTRY)
+
+
+def make_dynamics(name: str, sim_cfg, features=None, fleet=None, mesh=None,
+                  params: Tuple = ()) -> DynamicsProcess:
+    """Instantiate a registered process.  ``params`` is the hashable
+    ``FLConfig.dynamics_params`` tuple of ``(key, value)`` pairs."""
+    return get_dynamics(name)(sim_cfg, features=features, fleet=fleet,
+                              mesh=mesh, **dict(params))
+
+
+# ---------------------------------------------------------------------------
+# Offline simulation helpers (examples / tests / summaries)
+# ---------------------------------------------------------------------------
+
+def simulate_availability(process: DynamicsProcess, rounds: int,
+                          seed: int = 0) -> np.ndarray:
+    """Roll a process forward ``rounds`` rounds; returns the (T, N) bool
+    online matrix.  Works for host-side processes too (their draws come
+    from the wrapped Fleet's RNG)."""
+    if process.host_side:
+        return np.stack([process.online_mask() for _ in range(rounds)])
+    step = jax.jit(process.step)
+    base = jax.random.key(seed)
+    state = process.init_state(jax.random.fold_in(base, 1 << 16))
+    rows = []
+    for t in range(rounds):
+        state, draw = step(state, jax.random.fold_in(base, t))
+        rows.append(np.asarray(draw.online))
+    return np.stack(rows)
+
+
+def availability_summary(online: np.ndarray) -> Dict[str, float]:
+    """Summary statistics of a (T, N) availability matrix: mean online
+    fraction and mean session length (consecutive-online run length, in
+    rounds, over sessions that started within the window)."""
+    online = np.asarray(online, bool)
+    frac = float(online.mean())
+    # session starts: online now, offline (or window edge) before
+    prev = np.vstack([np.zeros((1, online.shape[1]), bool), online[:-1]])
+    starts = online & ~prev
+    n_sessions = int(starts.sum())
+    mean_len = float(online.sum() / n_sessions) if n_sessions else 0.0
+    return {"mean_online_fraction": frac,
+            "mean_session_length": mean_len,
+            "num_sessions": n_sessions}

@@ -1,0 +1,211 @@
+"""Built-in fleet-dynamics processes.
+
+Four availability regimes over the same static population
+(``FleetFeatures``), all device-resident except the legacy host wrapper:
+
+* ``bernoulli_host`` — the seed simulator's host-numpy RNG path, kept
+  bit-identical for the golden trajectories (``host_side=True``: the
+  engine routes it through the historical round loop);
+* ``bernoulli``      — the same memoryless i.i.d. model, drawn on device
+  from a folded jax key (the apples-to-apples device baseline);
+* ``markov``         — two-state on/off churn with per-device transition
+  rates whose stationary distribution matches each device's
+  ``online_rate`` (correlated availability *in time*; cf. the
+  correlated-failure regimes of arXiv 2305.09856);
+* ``sessions``       — semi-Markov Weibull session/gap lengths with a
+  diurnal gap modulation; mid-round interruption follows the session
+  hazard, so with shape k=1 (memoryless) the engine's exposure-scaled
+  Bernoulli rule ``1-(1-p)^work_frac`` is *exact*, and k<1 produces the
+  heavy-tailed churn real fleets show.
+
+The trace-replay process lives in ``repro.fleet.traces``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fleet.api import (DynamicsProcess, FleetDraw, FleetState,
+                             register_dynamics)
+
+
+@register_dynamics("bernoulli_host")
+class BernoulliHostProcess(DynamicsProcess):
+    """Legacy host-RNG draws (the seed ``Fleet`` methods), unchanged.
+
+    Exists so the registry covers the historical path; the engine detects
+    ``host_side`` and runs the numpy round loop against the wrapped
+    ``Fleet`` — every pre-existing golden trajectory stays bit-identical.
+    """
+    host_side = True
+
+    def __init__(self, sim_cfg, features=None, fleet=None, mesh=None,
+                 **params):
+        if fleet is None:
+            raise ValueError("bernoulli_host wraps the legacy Fleet — "
+                             "pass fleet=")
+        self.sim_cfg = sim_cfg
+        self.fleet = fleet
+        self.mesh = mesh
+        self.params = dict(params)
+
+    def online_mask(self):
+        return self.fleet.online_mask()
+
+    def failure_draw(self, work_frac):
+        return self.fleet.failure_draw(work_frac)
+
+    def failure_step(self, steps):
+        return self.fleet.failure_step(steps)
+
+
+@register_dynamics("bernoulli")
+class BernoulliProcess(DynamicsProcess):
+    """Memoryless i.i.d. availability, drawn on device.
+
+    Distributionally the ``bernoulli_host`` model (online ~
+    Bern(online_rate), exposure-scaled failures from ``undep``) but from
+    a folded ``jax.random`` key — no host RNG, no per-round transfer."""
+
+    def step(self, state, key):
+        k_on, k_draw = jax.random.split(key)
+        u = jax.random.uniform(k_on, (self.num_clients,))
+        online = u < self.features.online_rate
+        draw = self._base_draw(k_draw, online)
+        return FleetState(t=state.t + 1, slot=state.slot), draw
+
+
+@register_dynamics("markov")
+class MarkovProcess(DynamicsProcess):
+    """Two-state on/off churn chain, per-device rates.
+
+    ``mean_on`` (rounds) sets the expected on-sojourn: the off→on rate is
+    solved so each device's stationary availability equals its
+    ``online_rate`` (clipped where the rates would leave [0, 1]).  Unlike
+    ``bernoulli``, availability is correlated across rounds — a device
+    seen online will likely stay online ~``mean_on`` rounds, which is
+    what session-persistent selection policies exploit."""
+
+    def __init__(self, sim_cfg, features=None, fleet=None, mesh=None,
+                 mean_on: float = 5.0, **params):
+        super().__init__(sim_cfg, features=features, fleet=fleet, mesh=mesh,
+                         mean_on=mean_on, **params)
+        self.mean_on = float(mean_on)
+        r = self.features.online_rate
+        self._p_on_off = jnp.clip(1.0 / self.mean_on, 0.0, 1.0)
+        self._p_off_on = jnp.clip(self._p_on_off * r / (1.0 - r), 0.0, 1.0)
+
+    def stationary(self) -> np.ndarray:
+        """Analytic stationary P(online) per device (after clipping)."""
+        p10 = np.broadcast_to(np.asarray(self._p_on_off),
+                              (self.num_clients,))
+        p01 = np.asarray(self._p_off_on)
+        return p01 / (p01 + p10)
+
+    def init_state(self, key):
+        on0 = jax.random.uniform(key, (self.num_clients,)) \
+            < self.features.online_rate
+        return FleetState(t=jnp.int32(0), slot=on0)
+
+    def step(self, state, key):
+        k_flip, k_draw = jax.random.split(key)
+        u = jax.random.uniform(k_flip, (self.num_clients,))
+        on = jnp.where(state.slot, u >= self._p_on_off, u < self._p_off_on)
+        draw = self._base_draw(k_draw, on)
+        return FleetState(t=state.t + 1, slot=on), draw
+
+
+def _weibull(key, shape, scale, k):
+    """Weibull(scale, k) via inverse CDF: scale * (-ln(1-U))^{1/k}."""
+    u = jax.random.uniform(key, shape, minval=1e-7, maxval=1.0)
+    return scale * jnp.power(-jnp.log1p(-u), 1.0 / k)
+
+
+@register_dynamics("sessions")
+class SessionsProcess(DynamicsProcess):
+    """Semi-Markov session/gap process with diurnal modulation.
+
+    Devices alternate between online *sessions* and offline *gaps* whose
+    lengths (in rounds) are Weibull-distributed: ``shape_on``/``shape_gap``
+    < 1 gives the heavy-tailed sojourns measured on real fleets; per-device
+    gap means are solved so long-run availability matches ``online_rate``.
+    Gap draws are scaled by a diurnal factor ``1 + amp*cos(2π(t-phase)/
+    period)`` — long gaps at "night" depress fleet-wide availability in a
+    correlated, periodic way.
+
+    Mid-round interruption uses the *session hazard*: ``fail_p`` is the
+    probability the current session (age ``a``) ends within one more
+    round, ``1 - S(a+1)/S(a)``, optionally mixed with the device's
+    intrinsic ``undep`` (``undep_mix``).  With ``shape_on == 1`` the
+    hazard is constant and the engine's exposure rule ``1-(1-p)^w`` is
+    exactly the memoryless session-end probability within work ``w``
+    (property-tested in tests/test_fleet_dynamics.py)."""
+
+    def __init__(self, sim_cfg, features=None, fleet=None, mesh=None,
+                 mean_on: float = 4.0, shape_on: float = 1.0,
+                 shape_gap: float = 1.0, amp: float = 0.0,
+                 period: float = 24.0, phase: float = 0.0,
+                 undep_mix: float = 0.0, **params):
+        super().__init__(sim_cfg, features=features, fleet=fleet, mesh=mesh,
+                         mean_on=mean_on, shape_on=shape_on,
+                         shape_gap=shape_gap, amp=amp, period=period,
+                         phase=phase, undep_mix=undep_mix, **params)
+        self.mean_on = float(mean_on)
+        self.shape_on = float(shape_on)
+        self.shape_gap = float(shape_gap)
+        self.amp = float(amp)
+        self.period = float(period)
+        self.phase = float(phase)
+        self.undep_mix = float(undep_mix)
+        r = self.features.online_rate
+        mean_gap = self.mean_on * (1.0 - r) / r
+        # Weibull scale from mean: λ = mean / Γ(1 + 1/k)
+        self._scale_on = self.mean_on / math.gamma(1.0 + 1.0 / self.shape_on)
+        self._scale_gap = mean_gap / math.gamma(1.0 + 1.0 / self.shape_gap)
+
+    def _diurnal(self, t):
+        return 1.0 + self.amp * jnp.cos(
+            2.0 * jnp.pi * (t - self.phase) / self.period)
+
+    def session_hazard(self, age):
+        """P(session ends within one more round | survived to ``age``)."""
+        lam = self._scale_on
+        k = self.shape_on
+        return 1.0 - jnp.exp(jnp.power(age / lam, k)
+                             - jnp.power((age + 1.0) / lam, k))
+
+    def init_state(self, key):
+        k_on, k_dur = jax.random.split(key)
+        n = (self.num_clients,)
+        on0 = jax.random.uniform(k_on, n) < self.features.online_rate
+        dur_on = _weibull(k_dur, n, self._scale_on, self.shape_on)
+        dur_gap = _weibull(jax.random.fold_in(k_dur, 1), n,
+                           self._scale_gap, self.shape_gap)
+        remaining = jnp.where(on0, dur_on, dur_gap)
+        slot = {"on": on0, "remaining": remaining,
+                "age": jnp.zeros(n, jnp.float32)}
+        return FleetState(t=jnp.int32(0), slot=slot)
+
+    def step(self, state, key):
+        k_on, k_gap, k_draw = jax.random.split(key, 3)
+        n = (self.num_clients,)
+        slot = state.slot
+        remaining = slot["remaining"] - 1.0
+        expired = remaining <= 0.0
+        on = jnp.where(expired, ~slot["on"], slot["on"])
+        new_on = _weibull(k_on, n, self._scale_on, self.shape_on)
+        new_gap = _weibull(k_gap, n,
+                           self._scale_gap * self._diurnal(state.t),
+                           self.shape_gap)
+        remaining = jnp.where(expired, jnp.where(on, new_on, new_gap),
+                              remaining)
+        age = jnp.where(expired, 0.0, slot["age"] + 1.0)
+        p_sess = self.session_hazard(age)
+        fail_p = 1.0 - (1.0 - p_sess) \
+            * (1.0 - self.undep_mix * self.features.undep)
+        draw = self._base_draw(k_draw, on, fail_p=fail_p.astype(jnp.float32))
+        new_slot = {"on": on, "remaining": remaining, "age": age}
+        return FleetState(t=state.t + 1, slot=new_slot), draw

@@ -1,0 +1,120 @@
+"""Trace replay: recorded availability matrices + a synthetic generator.
+
+``TraceProcess`` replays an (N, T) boolean availability matrix on device
+— the matrix is placed (sharded over the client mesh axis) once at
+``init_state`` and indexed by the round clock, wrapping at T.  Real
+deployments record such matrices from production fleets; here
+``synthesize_trace`` manufactures three structured regimes the i.i.d.
+simulator cannot express:
+
+* ``diurnal``            — per-device sinusoidal availability with a few
+  timezone clusters (phase groups), so whole cohorts rise and set
+  together;
+* ``flash-crowd``        — a low-availability baseline punctuated by
+  bursts where a large random cohort comes online simultaneously (the
+  news-event / charging-hour pattern);
+* ``correlated-dropout`` — regional outage events that knock an entire
+  cluster offline for several consecutive rounds (the correlated client
+  failures studied in arXiv 2305.09856).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fleet.api import (DynamicsProcess, FleetState, register_dynamics)
+
+TRACE_PATTERNS = ("diurnal", "flash-crowd", "correlated-dropout")
+
+
+def synthesize_trace(num_clients: int, horizon: int,
+                     pattern: str = "diurnal", seed: int = 0,
+                     online_rate: Optional[np.ndarray] = None,
+                     period: int = 24, amp: float = 0.4,
+                     n_clusters: int = 4, event_rate: float = 0.05,
+                     outage_len: int = 3, burst_frac: float = 0.8,
+                     base_rate: float = 0.15) -> np.ndarray:
+    """Generate an (N, T) boolean availability matrix.
+
+    ``online_rate`` (per-device long-run target, (N,)) anchors the
+    diurnal/correlated-dropout baselines; defaults to U[0.2, 0.8].
+    """
+    rng = np.random.RandomState(seed)
+    N, T = num_clients, horizon
+    if online_rate is None:
+        online_rate = rng.uniform(0.2, 0.8, N)
+    r = np.clip(np.asarray(online_rate, np.float64), 0.02, 0.98)
+    cluster = rng.randint(0, max(n_clusters, 1), N)
+    t = np.arange(T)
+
+    if pattern == "diurnal":
+        # timezone clusters: one phase per cluster, availability follows
+        # a clipped sinusoid around each device's base rate
+        phases = rng.uniform(0, period, max(n_clusters, 1))[cluster]
+        p = r[:, None] + amp * np.cos(
+            2 * np.pi * (t[None, :] + phases[:, None]) / period)
+        return rng.rand(N, T) < np.clip(p, 0.02, 0.98)
+
+    if pattern == "flash-crowd":
+        # sparse baseline; every ``period`` rounds a burst pulls a large
+        # random cohort online for a couple of rounds
+        p = np.full((N, T), base_rate)
+        for t0 in range(0, T, period):
+            crowd = rng.rand(N) < burst_frac
+            p[crowd, t0:t0 + max(period // 8, 2)] = 0.95
+        return rng.rand(N, T) < p
+
+    if pattern == "correlated-dropout":
+        # independent baseline + regional outages: an event takes one
+        # whole cluster offline for ``outage_len`` consecutive rounds
+        online = rng.rand(N, T) < r[:, None]
+        for t0 in range(T):
+            if rng.rand() < event_rate:
+                hit = cluster == rng.randint(0, max(n_clusters, 1))
+                online[hit, t0:t0 + outage_len] = False
+        return online
+
+    raise ValueError(f"unknown trace pattern {pattern!r}; "
+                     f"available: {', '.join(TRACE_PATTERNS)}")
+
+
+@register_dynamics("trace")
+class TraceProcess(DynamicsProcess):
+    """Replay an (N, T) availability matrix, wrapping at T.
+
+    Construct with an explicit ``trace=`` matrix (recorded data) or let
+    it synthesize one via ``pattern``/``horizon``/``trace_seed`` — the
+    scenario presets use the latter.  Failure/interruption variates stay
+    stochastic (exposure-scaled from ``undep``); availability is the
+    deterministic replay."""
+
+    def __init__(self, sim_cfg, features=None, fleet=None, mesh=None,
+                 trace: Optional[np.ndarray] = None,
+                 pattern: str = "diurnal", horizon: float = 96,
+                 trace_seed: float = 0, **params):
+        super().__init__(sim_cfg, features=features, fleet=fleet, mesh=mesh,
+                         pattern=pattern, horizon=horizon,
+                         trace_seed=trace_seed, **params)
+        if trace is None:
+            trace = synthesize_trace(
+                self.num_clients, int(horizon), pattern=pattern,
+                seed=int(trace_seed),
+                online_rate=np.asarray(self.features.online_rate),
+                **{k: v for k, v in params.items()
+                   if k in ("period", "amp", "n_clusters", "event_rate",
+                            "outage_len", "burst_frac", "base_rate")})
+        trace = np.asarray(trace, bool)
+        if trace.ndim != 2 or trace.shape[0] != self.num_clients:
+            raise ValueError(f"trace must be (num_clients, T), got "
+                             f"{trace.shape} for {self.num_clients} clients")
+        from repro.fl.simulator import place_per_client
+        # one-time placement: (N, T) sharded over clients under a mesh
+        self.trace = place_per_client(trace, mesh)
+        self.horizon = trace.shape[1]
+
+    def step(self, state, key):
+        online = jnp.take(self.trace, state.t % self.horizon, axis=1)
+        draw = self._base_draw(key, online)
+        return FleetState(t=state.t + 1, slot=state.slot), draw

@@ -184,6 +184,28 @@ def fleet_tree_shardings(tree, mesh: Mesh, num_clients: int):
     return jax.tree.map(one, tree)
 
 
+def fleet_constraint(tree, mesh: Optional[Mesh], num_clients: int):
+    """``with_sharding_constraint`` fleet specs on a pytree *inside* jit.
+
+    Every (N, ...) leaf is pinned to the client-axis sharding, anything
+    else (round clocks, replicated scalars) is left alone — applied to
+    the dynamics ``step`` outputs so per-round draws stay sharded no
+    matter what the process body did.  Identity when ``mesh`` is None.
+    """
+    if mesh is None:
+        return tree
+    size = fleet_axis_size(mesh)
+
+    def one(leaf):
+        shape = getattr(leaf, "shape", ())
+        if shape and shape[0] == num_clients and num_clients % size == 0:
+            return jax.lax.with_sharding_constraint(
+                leaf, fleet_sharding(mesh, len(shape)))
+        return leaf
+
+    return jax.tree.map(one, tree)
+
+
 def place_fleet(tree, mesh: Optional[Mesh], num_clients: int):
     """``jax.device_put`` a client-stacked pytree onto the fleet mesh
     (identity when ``mesh`` is None — the single-device path)."""

@@ -1,0 +1,455 @@
+"""Fleet-dynamics subsystem: process registry, process statistics
+(property tests), trace replay/generation, scenarios, and the
+no-per-round-host-transfer guarantee of the device round path.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.data.synthetic import federated_classification
+from repro.fl import FleetEngine, Policy, SimConfig, register_policy
+from repro.fl import api as API
+from repro.fleet import (FleetFeatures, MarkovProcess, SessionsProcess,
+                         TraceProcess, apply_scenario,
+                         availability_summary, available_dynamics,
+                         available_scenarios, get_dynamics, get_scenario,
+                         make_dynamics, register_dynamics,
+                         simulate_availability, synthesize_trace)
+from repro.fleet.api import DynamicsProcess
+
+DEVICE_PROCESSES = ("bernoulli", "markov", "sessions", "trace")
+
+
+def _features(n, online_rate=0.5, undep=0.3, seed=0):
+    """Hand-built population (no Fleet) for statistical process tests."""
+    rng = np.random.RandomState(seed)
+    r = np.full(n, online_rate, np.float32) if np.isscalar(online_rate) \
+        else np.asarray(online_rate, np.float32)
+    return FleetFeatures(
+        undep=jnp.full((n,), undep, jnp.float32),
+        online_rate=jnp.asarray(r),
+        steps_per_sec=jnp.asarray(rng.uniform(0.5, 2.0, n)
+                                  .astype(np.float32)),
+        bandwidth=jnp.asarray(rng.uniform(1.0, 30.0, n)
+                              .astype(np.float32)),
+        battery=jnp.asarray(rng.uniform(0.2, 1.0, n).astype(np.float32)),
+        stability=jnp.asarray(rng.uniform(0.3, 1.0, n)
+                              .astype(np.float32)))
+
+
+def _setup(n=16, rounds=3, dynamics=None, **fl_kw):
+    data = federated_classification(n, seed=0, n_per_client=32)
+    sim = SimConfig(num_clients=n, rounds=rounds, seed=0, local_steps=2)
+    fl = FLConfig(num_clients=n, clients_per_round=8,
+                  **({"dynamics": dynamics} if dynamics else {}), **fl_kw)
+    return data, sim, fl
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_has_builtin_processes():
+    assert {"bernoulli_host", *DEVICE_PROCESSES} <= set(
+        available_dynamics())
+    assert get_dynamics("bernoulli_host").host_side
+    for name in DEVICE_PROCESSES:
+        assert not get_dynamics(name).host_side
+
+
+def test_registry_unknown_and_duplicates():
+    with pytest.raises(KeyError, match="unknown dynamics 'nope'"):
+        get_dynamics("nope")
+
+    @register_dynamics("_test_dyn")
+    class Dummy(DynamicsProcess):
+        pass
+    try:
+        assert get_dynamics("_test_dyn") is Dummy
+        with pytest.raises(ValueError, match="already registered"):
+            @register_dynamics("_test_dyn")
+            class Dummy2(DynamicsProcess):
+                pass
+        with pytest.raises(TypeError):
+            register_dynamics("_test_fn2")(lambda: None)
+    finally:
+        from repro.fleet import api as FAPI
+        FAPI._REGISTRY.pop("_test_dyn", None)
+
+
+def test_engine_rejects_unknown_dynamics():
+    data, sim, fl = _setup()
+    bad = dataclasses.replace(fl, dynamics="nope")
+    with pytest.raises(KeyError, match="unknown dynamics"):
+        FleetEngine(data, sim, bad)
+
+
+# ---------------------------------------------------------------------------
+# Legacy equivalence + device processes run the full round path
+# ---------------------------------------------------------------------------
+
+def test_bernoulli_host_explicit_matches_default():
+    """Default config and an explicit bernoulli_host run are the same
+    legacy path — identical History."""
+    data, sim, fl = _setup()
+    ref = FleetEngine(data, sim, fl).run("flude", diagnostics=False)
+    fl_h = dataclasses.replace(fl, dynamics="bernoulli_host")
+    h = FleetEngine(data, sim, fl_h).run("flude", diagnostics=False)
+    assert h.acc == ref.acc
+    assert h.received == ref.received and h.selected == ref.selected
+    assert h.wall_clock == ref.wall_clock and h.comm_mb == ref.comm_mb
+
+
+@pytest.mark.parametrize("dynamics", DEVICE_PROCESSES)
+def test_device_process_runs_full_round_path(dynamics):
+    data, sim, fl = _setup(dynamics=dynamics)
+    engine = FleetEngine(data, sim, fl)
+    h1 = engine.run("flude", diagnostics=False)
+    h2 = engine.run("flude", diagnostics=False)     # reproducible per run
+    assert len(h1.acc) == 3
+    assert h1.acc == h2.acc and h1.received == h2.received
+    assert all(r <= s for r, s in zip(h1.received, h1.selected))
+    assert all(np.isfinite(h1.wall_clock))
+    # the fleet process state stays device-resident between runs
+    assert engine._last_fleet_state is not None
+    assert engine._last_draw.online.shape == (16,)
+
+
+def test_observation_carries_device_draw():
+    seen = {}
+
+    @register_policy("_test_draw_probe")
+    class Probe(Policy):
+        def plan(self, state, obs, rng):
+            seen["draw"] = obs.draw
+            n = self.fl_cfg.num_clients
+            sel = np.asarray(obs.online).copy()
+            from repro.fl.api import RoundPlan
+            return state, RoundPlan.create(
+                sel, sel, np.zeros(n, bool), float(max(sel.sum(), 0)))
+    try:
+        data, sim, fl = _setup(rounds=1, dynamics="markov")
+        FleetEngine(data, sim, fl).run("_test_draw_probe",
+                                       diagnostics=False)
+        assert seen["draw"] is not None
+        assert isinstance(seen["draw"].online, jax.Array)
+        data, sim, fl = _setup(rounds=1)
+        FleetEngine(data, sim, fl).run("_test_draw_probe",
+                                       diagnostics=False)
+        assert seen["draw"] is None          # legacy path: no device draw
+    finally:
+        API._REGISTRY.pop("_test_draw_probe", None)
+
+
+# ---------------------------------------------------------------------------
+# Process statistics (property tests)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mean_on,rate", [(4.0, 0.5), (6.0, 0.3),
+                                          (5.0, 0.7)])
+def test_markov_empirical_availability_matches_stationary(mean_on, rate):
+    """Long-run per-device availability of the markov chain matches its
+    analytic stationary distribution (which equals online_rate when the
+    transition rates are unclipped)."""
+    n, T = 256, 1200
+    proc = MarkovProcess(SimConfig(num_clients=n),
+                         features=_features(n, online_rate=rate),
+                         mean_on=mean_on)
+    stat = proc.stationary()
+    np.testing.assert_allclose(stat, rate, atol=1e-6)
+    online = simulate_availability(proc, T, seed=3)          # (T, N)
+    emp = online.mean(axis=0)
+    # fleet-level bias averages out; per-device error is bounded by the
+    # chain's mixing time (~mean_on rounds of correlation)
+    assert abs(emp.mean() - rate) < 0.02
+    assert np.abs(emp - stat).mean() < 0.07
+
+
+def test_markov_availability_is_persistent():
+    """Sanity on the churn structure: P(online_t | online_{t-1}) ==
+    1 - 1/mean_on >> stationary rate (unlike the memoryless bernoulli)."""
+    n, T, mean_on = 256, 600, 6.0
+    proc = MarkovProcess(SimConfig(num_clients=n),
+                         features=_features(n, online_rate=0.4),
+                         mean_on=mean_on)
+    online = simulate_availability(proc, T, seed=5)
+    prev, cur = online[:-1], online[1:]
+    stay = (cur & prev).sum() / max(prev.sum(), 1)
+    assert abs(stay - (1.0 - 1.0 / mean_on)) < 0.03
+    assert stay > 0.6
+
+
+def test_sessions_memoryless_reduces_to_bernoulli_exposure():
+    """With Weibull shape k=1 the session hazard is constant, so the
+    engine's exposure rule 1-(1-p)^w is *exactly* the memoryless
+    session-end probability within work fraction w."""
+    n, T, mean_on = 512, 300, 5.0
+    proc = SessionsProcess(SimConfig(num_clients=n),
+                           features=_features(n, online_rate=0.6),
+                           mean_on=mean_on, shape_on=1.0, shape_gap=1.0,
+                           undep_mix=0.0)
+    p_analytic = 1.0 - np.exp(-1.0 / mean_on)     # λ = mean_on at k=1
+    # hazard is age-independent at k=1
+    for age in (0.0, 3.0, 11.0):
+        assert float(proc.session_hazard(age)) == pytest.approx(
+            p_analytic, abs=1e-6)
+    step = jax.jit(proc.step)
+    base = jax.random.key(7)
+    state = proc.init_state(jax.random.fold_in(base, 1 << 16))
+    hits = {w: 0 for w in (0.25, 0.5, 1.0)}
+    total = 0
+    for t in range(T):
+        state, draw = step(state, jax.random.fold_in(base, t))
+        for w in hits:
+            hits[w] += int(np.asarray(
+                draw.failure_mask(jnp.full((n,), w))).sum())
+        total += n
+    for w, h in hits.items():
+        expect = 1.0 - (1.0 - p_analytic) ** w
+        assert abs(h / total - expect) < 0.01, (w, h / total, expect)
+
+
+def test_sessions_heavy_tail_hazard_decreases_with_age():
+    """k<1 (heavy-tailed sessions): old sessions are *safer* per round —
+    the non-memoryless regime the i.i.d. simulator cannot express."""
+    proc = SessionsProcess(SimConfig(num_clients=8),
+                           features=_features(8), mean_on=4.0,
+                           shape_on=0.5)
+    h0 = float(proc.session_hazard(0.0))
+    h8 = float(proc.session_hazard(8.0))
+    assert h0 > h8 > 0.0
+
+
+def test_sessions_diurnal_modulates_availability():
+    n, period = 256, 16
+    proc = SessionsProcess(SimConfig(num_clients=n),
+                           features=_features(n, online_rate=0.5),
+                           mean_on=3.0, amp=0.8, period=float(period))
+    online = simulate_availability(proc, 8 * period, seed=11)
+    by_phase = online.reshape(-1, period, n).mean(axis=(0, 2))  # (period,)
+    assert by_phase.max() - by_phase.min() > 0.1
+    flat = SessionsProcess(SimConfig(num_clients=n),
+                           features=_features(n, online_rate=0.5),
+                           mean_on=3.0, amp=0.0, period=float(period))
+    online_f = simulate_availability(flat, 8 * period, seed=11)
+    by_phase_f = online_f.reshape(-1, period, n).mean(axis=(0, 2))
+    assert by_phase_f.max() - by_phase_f.min() < \
+        (by_phase.max() - by_phase.min())
+
+
+# ---------------------------------------------------------------------------
+# Trace replay + synthetic generator
+# ---------------------------------------------------------------------------
+
+def test_trace_replay_is_exact_and_wraps():
+    n, T = 12, 7
+    mat = np.random.RandomState(0).rand(n, T) < 0.5
+    proc = TraceProcess(SimConfig(num_clients=n), features=_features(n),
+                        trace=mat)
+    online = simulate_availability(proc, 2 * T + 3, seed=0)
+    expect = np.concatenate([mat, mat, mat[:, :3]], axis=1).T
+    np.testing.assert_array_equal(online, expect)
+
+
+def test_trace_rejects_bad_shapes():
+    with pytest.raises(ValueError, match="must be"):
+        TraceProcess(SimConfig(num_clients=8), features=_features(8),
+                     trace=np.ones((4, 5), bool))
+
+
+def test_trace_generator_patterns():
+    n, T = 128, 96
+    for pattern in ("diurnal", "flash-crowd", "correlated-dropout"):
+        mat = synthesize_trace(n, T, pattern=pattern, seed=2)
+        assert mat.shape == (n, T) and mat.dtype == bool
+        assert 0.05 < mat.mean() < 0.95
+    # flash-crowd: burst rounds vs sparse baseline
+    fc = synthesize_trace(n, T, pattern="flash-crowd", seed=2)
+    col = fc.mean(axis=0)
+    assert col.max() > 0.6 and np.median(col) < 0.35
+    # diurnal: availability oscillates across rounds
+    di = synthesize_trace(n, T, pattern="diurnal", seed=2, amp=0.4)
+    cold = di.mean(axis=0)
+    assert cold.std() > 0.05
+    # correlated-dropout: some round loses far more devices than the
+    # independent baseline would
+    cd = synthesize_trace(n, 400, pattern="correlated-dropout", seed=2,
+                          event_rate=0.15)
+    colc = cd.mean(axis=0)
+    assert colc.min() < colc.mean() - 0.15
+    with pytest.raises(ValueError, match="unknown trace pattern"):
+        synthesize_trace(n, T, pattern="nope")
+
+
+def test_availability_summary_counts_sessions():
+    # two devices: [1,1,0,1,0], [0,1,1,1,1] -> 3 sessions, lengths 2,1,4
+    mat = np.array([[1, 0], [1, 1], [0, 1], [1, 1], [0, 1]], bool)
+    s = availability_summary(mat)
+    assert s["num_sessions"] == 3
+    assert s["mean_session_length"] == pytest.approx(7.0 / 3.0)
+    assert s["mean_online_fraction"] == pytest.approx(0.7)
+
+
+# ---------------------------------------------------------------------------
+# Scenarios
+# ---------------------------------------------------------------------------
+
+def test_scenario_presets_resolve():
+    names = available_scenarios()
+    assert {"paper", "diurnal", "flash-crowd", "correlated-dropout",
+            "trace-replay", "churn"} <= set(names)
+    for name in names:
+        sc = get_scenario(name)
+        get_dynamics(sc.dynamics)           # every preset is constructible
+    assert get_dynamics(get_scenario("paper").dynamics).host_side
+
+
+def test_apply_scenario_sets_dynamics():
+    _, _, fl = _setup()
+    fl2 = apply_scenario(fl, "churn")
+    assert fl2.dynamics == "markov"
+    assert dict(fl2.dynamics_params)["mean_on"] == 5.0
+    assert fl2.clients_per_round == fl.clients_per_round
+    with pytest.raises(KeyError, match="unknown scenario"):
+        apply_scenario(fl, "nope")
+
+
+def test_make_dynamics_forwards_scenario_params():
+    sc = get_scenario("diurnal")
+    proc = make_dynamics(sc.dynamics, SimConfig(num_clients=8),
+                         features=_features(8), params=sc.params)
+    assert isinstance(proc, SessionsProcess)
+    assert proc.amp == 0.6 and proc.period == 24.0
+
+
+# ---------------------------------------------------------------------------
+# The device round path never uploads per-round state
+# ---------------------------------------------------------------------------
+
+def test_device_rounds_no_per_round_place_per_client(monkeypatch):
+    """Acceptance: under a device process the engine's round loop does no
+    per-round ``place_per_client`` host→device hand-off — the call count
+    is independent of the round count (per-run policy/constant placement
+    only), and zero in the steady state."""
+    import repro.fl.engine as ENG
+    import repro.fl.policies as POL
+    import repro.fl.simulator as SIMM
+
+    counts = {"n": 0}
+    orig = SIMM.place_per_client
+
+    def counting(arr, mesh=None):
+        counts["n"] += 1
+        return orig(arr, mesh)
+
+    for mod in (ENG, POL, SIMM):
+        monkeypatch.setattr(mod, "place_per_client", counting)
+
+    data, sim, fl = _setup(dynamics="markov")
+    engine = FleetEngine(data, sim, fl)
+    engine.run("flude", rounds=1, diagnostics=False)     # compile+place
+
+    per_run = []
+    for rounds in (1, 5):
+        counts["n"] = 0
+        engine.run("flude", rounds=rounds, diagnostics=False)
+        per_run.append(counts["n"])
+    assert per_run[0] == per_run[1], per_run     # independent of rounds
+    assert per_run[1] <= 2, per_run              # per-run hints at most
+
+
+# ---------------------------------------------------------------------------
+# Sharded (8 forced host devices) dynamics round path
+# ---------------------------------------------------------------------------
+
+def _run(script, timeout=540):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+_MESH_SCRIPT = r"""
+from repro.launch.mesh import force_host_platform_device_count
+force_host_platform_device_count(8)
+import dataclasses
+import json
+import numpy as np
+import jax
+
+import repro.fl.engine as ENG
+import repro.fl.policies as POL
+import repro.fl.simulator as SIMM
+from repro.configs.base import FLConfig
+from repro.data.synthetic import federated_classification
+from repro.fl import FleetEngine, SimConfig
+
+n = 32
+data = federated_classification(n, seed=0, n_per_client=32)
+sim = SimConfig(num_clients=n, rounds=3, seed=0, local_steps=2)
+out = {"n_dev": len(jax.devices()), "dynamics": {}}
+
+counts = {"n": 0}
+orig = SIMM.place_per_client
+def counting(arr, mesh=None):
+    counts["n"] += 1
+    return orig(arr, mesh)
+for mod in (ENG, POL, SIMM):
+    mod.place_per_client = counting
+
+for dyn in ("markov", "sessions", "trace"):
+    fl = FLConfig(num_clients=n, clients_per_round=8, dynamics=dyn)
+    ref = FleetEngine(data, sim, fl).run("flude", diagnostics=False)
+    fl_m = dataclasses.replace(fl, mesh_shape=(8,))
+    engine = FleetEngine(data, sim, fl_m)
+    engine.run("flude", diagnostics=False)          # compile + place
+    per_run = []
+    for rounds in (1, 3):
+        counts["n"] = 0
+        h = engine.run("flude", rounds=rounds, diagnostics=False)
+        per_run.append(counts["n"])
+    draw = engine._last_draw
+    state_leaves = jax.tree.leaves(engine._last_fleet_state)
+    out["dynamics"][dyn] = {
+        "ints_exact": (h.received == ref.received
+                       and h.selected == ref.selected
+                       and h.wall_clock == ref.wall_clock),
+        "acc_err": float(max(abs(a - b)
+                             for a, b in zip(h.acc, ref.acc))),
+        "draw_shards": len(draw.online.sharding.device_set),
+        "state_sharded": all(
+            len(l.sharding.device_set) == 8
+            for l in state_leaves if getattr(l, "ndim", 0) >= 1
+            and l.shape and l.shape[0] == n),
+        "transfer_counts": per_run,
+    }
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_dynamics_round_path():
+    """Every device process runs the full round path sharded over 8
+    forced host devices: the trajectory matches single-device, draws and
+    process state live sharded on all 8 devices, and the
+    ``place_per_client`` count is round-count-independent (no per-round
+    host→device hand-off)."""
+    rec = _run(_MESH_SCRIPT)
+    assert rec["n_dev"] == 8
+    for dyn, r in rec["dynamics"].items():
+        assert r["ints_exact"], (dyn, r)
+        assert r["acc_err"] < 1e-6, (dyn, r)
+        assert r["draw_shards"] == 8, (dyn, r)
+        assert r["state_sharded"], (dyn, r)
+        assert r["transfer_counts"][0] == r["transfer_counts"][1], (dyn, r)
