@@ -287,6 +287,84 @@ def run_mesh():
     return record
 
 
+PIPE_DEPTHS = (1, 2, 4)
+PIPE_ROUNDS = 4 if QUICK else 10
+PIPE_EVAL_EVERY = 10
+PIPE_REPS = 1 if QUICK else 3
+
+
+def run_pipeline():
+    """Pipelined device round loop: rounds/sec at pipeline_depth 1/2/4.
+
+    Depth 1 is the PR-4 device loop's scheduling (every round's
+    bookkeeping resolves before the next round is planned); depth d
+    keeps d-1 rounds of bookkeeping in flight, so round k+1's fused
+    trainer + server step dispatch while round k executes.  Same policy,
+    fleet, dynamics and eval cadence per depth — trajectories are
+    bit-identical (tier-1 parity tests); only host/device overlap
+    changes.  The measurement interleaves PIPE_REPS repetitions of every
+    depth on pre-compiled engines and keeps each depth's best rep, so
+    slow machine-load drift cannot masquerade as (or hide) a speedup.
+    Merged into BENCH_engine.json under "pipeline"."""
+    n = N_MESH
+    sim, fl, data = _setup(n)
+    sim = dataclasses.replace(sim, rounds=WARMUP + PIPE_ROUNDS * PIPE_REPS)
+    engines = {}
+    for depth in PIPE_DEPTHS:
+        fl2 = dataclasses.replace(fl, dynamics="bernoulli",
+                                  pipeline_depth=depth)
+        engine = FleetEngine(data, sim, fl2, fleet=Fleet(sim))
+        engine.run(POLICY, rounds=WARMUP, diagnostics=False)  # jit warmup
+        engines[depth] = engine
+    reps = {depth: [] for depth in PIPE_DEPTHS}
+    acc = {}
+    for _ in range(PIPE_REPS):
+        for depth in PIPE_DEPTHS:
+            t0 = time.time()
+            h = engines[depth].run(POLICY, rounds=PIPE_ROUNDS,
+                                   eval_every=PIPE_EVAL_EVERY,
+                                   diagnostics=False)
+            reps[depth].append(PIPE_ROUNDS / (time.time() - t0))
+            acc[depth] = h.acc[-1]
+    depths = {}
+    for depth in PIPE_DEPTHS:
+        best = max(reps[depth])
+        depths[str(depth)] = {"rounds_per_sec": best,
+                              "reps_rounds_per_sec": reps[depth],
+                              "final_acc": acc[depth]}
+        emit(f"engine_pipe_d{depth}", 1e6 / best,
+             f"n={n};rps={best:.3f}")
+    speedup = depths["2"]["rounds_per_sec"] / depths["1"]["rounds_per_sec"]
+    path = os.path.join(RESULTS, "BENCH_engine.json")
+    record = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            record = json.load(f)
+    record["pipeline"] = {
+        "policy": POLICY, "n": n, "rounds": PIPE_ROUNDS,
+        "reps": PIPE_REPS, "eval_every": PIPE_EVAL_EVERY,
+        "dynamics": "bernoulli",
+        "depth2_over_depth1_speedup": speedup,
+        "note": "depth 1 = the PR-4 device loop's per-round host sync; "
+                "depth d defers History readback so up to d-1 rounds "
+                "stay in flight.  Trajectories are depth-invariant "
+                "(tests/test_round_close.py, tests/test_fleet_dynamics"
+                ".py).  The speedup is pure host/device overlap: it is "
+                "bounded by the host-side gap pipelining removes, which "
+                "on the 2-core CPU recording container is ~5% of a "
+                "round (fully-async dispatch upper bound measured "
+                "1.06x) and within that machine's load noise — "
+                "accelerator-backed hosts, where a round's host gap is "
+                "a much larger fraction, are where depth > 1 pays",
+        "depths": depths}
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    emit("engine_pipe_summary", 0.0,
+         f"depth2_over_depth1={speedup:.3f}x", record=None)
+    return record
+
+
 DYN_PATHS = (("host_rng", "bernoulli_host"),
              ("device_bernoulli", "bernoulli"),
              ("device_markov", "markov"))
@@ -343,5 +421,7 @@ if __name__ == "__main__":
         run_mesh()
     elif "--dynamics" in sys.argv[1:]:
         run_dynamics()
+    elif "--pipeline" in sys.argv[1:]:
+        run_pipeline()
     else:
         run()

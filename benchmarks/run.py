@@ -45,6 +45,9 @@ def main() -> None:
         # host-RNG vs device-resident fleet-draw paths (repro.fleet)
         "engine_dynamics": types.SimpleNamespace(
             run=bench_engine.run_dynamics),
+        # pipelined device round loop (pipeline_depth 1/2/4)
+        "engine_pipeline": types.SimpleNamespace(
+            run=bench_engine.run_pipeline),
     }
     print("name,us_per_call,derived")
     failed = []

@@ -266,6 +266,16 @@ class FLConfig:
     dynamics_params: Tuple[Tuple[str, Any], ...] = ()
     # ^ hashable ((key, value), ...) pairs forwarded to the process
     #   constructor (e.g. (("mean_on", 5.0),) for markov churn)
+    pipeline_depth: int = 1
+    # ^ rounds in flight on the device round path (device dynamics only).
+    #   1 = the classic loop: the host resolves each round's bookkeeping
+    #   (duration, received counts, eval) before planning the next round.
+    #   depth d keeps up to d-1 rounds of bookkeeping pending, so round
+    #   k+1's fused trainer + server step are dispatched while round k
+    #   still executes — trajectories are bit-identical at every depth
+    #   (the round close runs jitted on device; History rows are resolved
+    #   from device scalars in arrival order).  ``time_budget`` runs
+    #   resolve every round regardless (the budget check needs cum_time).
 
 
 @dataclass(frozen=True)

@@ -15,6 +15,7 @@ from repro.core.aggregation import (PackLayout, aggregation_weights,
                                     fed_aggregate, fed_aggregate_delta,
                                     fed_aggregate_packed, pack, pack_layout,
                                     pack_stacked, unpack)
-from repro.core.round import (FludePlan, FludeState, init_state,
+from repro.core.round import (FludePlan, FludeState, host_round_cut,
+                              init_state, make_round_cut,
                               make_server_round_step, plan_round,
                               receive_quorum, update_after_round)

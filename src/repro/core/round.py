@@ -11,9 +11,12 @@ computation (incl. staleness discount), packed single-kernel aggregation,
 and cache write/clear in ONE jitted call — the per-round hot path (§4.3)
 stays on device with no per-leaf dispatch or host round-trips.
 
-Round *termination* (lines 13–16: first |S|·R̄ uploads or deadline T) is a
-wall-clock matter and lives in ``repro.fl.simulator``/the launcher, which
-call ``receive_quorum`` below for the cutoff count.
+Round *termination* (lines 13–16: first |S|·R̄ uploads or deadline T)
+lives here too: ``host_round_cut`` is the numpy reference (the legacy
+host-RNG loop still runs it), ``make_round_cut`` is the jitted
+device-resident equivalent the engine's dynamics loop dispatches — the
+cut, billed duration and receive mask never leave the device, which is
+what lets the loop pipeline rounds (``FLConfig.pipeline_depth``).
 """
 from __future__ import annotations
 
@@ -22,6 +25,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import FLConfig
 from repro.core import aggregation as AGG
@@ -186,6 +190,96 @@ def make_server_round_step(template_params, *, local_steps: int,
         return new_global, caches
 
     return server_round_step
+
+
+def host_round_cut(times, quorum, round_deadline: float,
+                   waits_for_stragglers: bool):
+    """Round termination (Algorithm 2 lines 13–16), numpy reference.
+
+    ``times``: (N,) per-device finish times, inf where the device never
+    uploads.  The round closes at the ``ceil(quorum)``-th upload (capped
+    by the deadline T); async/semi-async designs
+    (``waits_for_stragglers=False``) close at the last arrival when the
+    quorum is not met; otherwise the server idle-waits the full deadline.
+    Returns ``(t_cut, duration)`` — ``duration`` is the billed round wall
+    clock (always finite when the deadline is).
+    """
+    times = np.asarray(times)
+    q = int(np.ceil(float(quorum)))
+    finite = np.sort(times[np.isfinite(times)])
+    if finite.size >= q and q > 0:
+        t_cut = min(float(finite[q - 1]), round_deadline)
+    elif not waits_for_stragglers and finite.size > 0:
+        t_cut = min(float(finite[-1]), round_deadline)
+    else:
+        t_cut = round_deadline
+    duration = t_cut if np.isfinite(t_cut) else round_deadline
+    return t_cut, duration
+
+
+def make_round_cut(num_clients: int, round_deadline: float,
+                   waits_for_stragglers: bool, mesh=None):
+    """Build the jitted device-resident round cut (lines 13–16).
+
+    Semantically identical to :func:`host_round_cut` — and bit-identical
+    on float32 times (property-tested in tests/test_round_close*.py):
+    uncapped cuts are exact float32 arrival times, and deadline-capped
+    rounds are flagged instead of billed in float32.  The returned
+    callable maps ``(times, quorum, success)`` to ``(t_cut, received,
+    capped)``:
+
+    * ``t_cut`` — float32 device scalar; the billed host-side duration is
+      ``round_deadline if capped else float(t_cut)`` (the host reference
+      bills the *float64* deadline, which float32 cannot always
+      represent — e.g. ``round_deadline=100.3`` — so the cap is returned
+      as a flag and the ledger substitutes the exact config value);
+    * ``received`` — the (N,) receive mask, pinned to the client-mesh
+      sharding when ``mesh`` is given.  Deadline-capped rounds compare
+      against the float32-*nearest* cast of the deadline — exactly what
+      the pre-pipelining loop's jitted ``times <= cut`` did with the
+      host's float64 cut, so depth-1 receive masks stay bit-identical;
+    * ``capped`` — bool device scalar: the round idle-waited (or closed
+      at) the deadline rather than an arrival.  The flag itself is exact
+      (``t > deadline`` decided via the largest float32 ≤ deadline).
+
+    Everything stays on device, so the engine can dispatch the server
+    step — and further rounds — without draining the device queue.
+    ``waits_for_stragglers`` is a static policy trait: the async variant
+    compiles the extra close-at-last-arrival branch in, the sync variant
+    compiles it out.
+    """
+    deadline = float(round_deadline)
+    # nearest float32 (what the old received_fn's weak f64->f32 cast did)
+    d_cmp = np.float32(deadline)
+    # largest float32 <= deadline: for float32 t, (t > d_flag) == (t > d)
+    d_flag = d_cmp
+    if float(d_flag) > deadline:
+        d_flag = np.nextafter(d_flag, np.float32(-np.inf))
+
+    @jax.jit
+    def round_cut(times, quorum, success):
+        q = jnp.ceil(jnp.asarray(quorum, jnp.float32)).astype(jnp.int32)
+        order = jnp.sort(times)                   # inf sorts to the end
+        finite_count = jnp.isfinite(times).sum()
+        t_quorum = order[jnp.clip(q - 1, 0, num_clients - 1)]
+        has_quorum = (finite_count >= q) & (q > 0)
+        t_raw = jnp.where(has_quorum, t_quorum, jnp.inf)
+        if not waits_for_stragglers:
+            # async/semi-async designs close at the last arrival
+            t_last = order[jnp.clip(finite_count - 1, 0, num_clients - 1)]
+            t_raw = jnp.where(~has_quorum & (finite_count > 0), t_last,
+                              t_raw)
+        capped = t_raw > d_flag
+        t_cut = jnp.where(capped, d_cmp, t_raw)
+        received = success & (times <= t_cut)
+        if mesh is not None:
+            from repro.sharding import partitioning as SP
+            received = SP.fleet_constraint(received, mesh, num_clients)
+            t_cut, capped = SP.replicated_constraint((t_cut, capped),
+                                                     mesh)
+        return t_cut, received, capped
+
+    return round_cut
 
 
 def receive_quorum(plan: FludePlan) -> jax.Array:

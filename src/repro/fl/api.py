@@ -85,12 +85,50 @@ class RoundPlan:
         object.__setattr__(plan, "_validated", True)
         return plan
 
-    def validate(self, num_clients: Optional[int] = None) -> "RoundPlan":
-        """Shape/dtype/value checks on concrete (host) values.
+    @classmethod
+    def device(cls, selected, distribute, resume, quorum,
+               steps_override=None, agg_weights=None) -> "RoundPlan":
+        """Device-native construction for jnp policies.
 
-        Raises ``ValueError`` on malformed plans; returns self so calls
-        chain.  Under tracing the value checks are skipped (abstract
-        arrays have no concrete sums)."""
+        Runs the *structural* checks only (1-D bool masks of one length,
+        int/float optionals of the same length) — shape and dtype are
+        array metadata, so nothing syncs and ``quorum`` stays a device
+        scalar.  This is what keeps a jitted policy's ``plan`` a pure
+        dispatch: the engine's pipelined device loop can enqueue the
+        round without draining the device queue.  The value invariants
+        (quorum ≤ |selected|, resume ⊆ selected, override ≤ the trainer's
+        scan length) are the caller's responsibility — built-in device
+        policies guarantee them by construction, and the engine clamps
+        the workload regardless.
+        """
+        plan = cls(selected=selected, distribute=distribute, resume=resume,
+                   quorum=quorum, steps_override=steps_override,
+                   agg_weights=agg_weights)
+        n = plan._check_structure()
+        if getattr(quorum, "ndim", 0) != 0:
+            raise ValueError(
+                f"RoundPlan.quorum must be a scalar, got shape "
+                f"{getattr(quorum, 'shape', None)} — a non-scalar quorum "
+                f"broadcasts through the jitted round cut and only fails "
+                f"rounds later at ledger readback")
+        if steps_override is not None and (
+                getattr(steps_override, "shape", None) != (n,)
+                or not np.issubdtype(np.dtype(steps_override.dtype),
+                                     np.integer)):
+            raise ValueError(
+                f"RoundPlan.steps_override must be ({n},) int, got shape "
+                f"{getattr(steps_override, 'shape', None)} dtype "
+                f"{getattr(steps_override, 'dtype', None)}")
+        if agg_weights is not None and \
+                getattr(agg_weights, "shape", None) != (n,):
+            raise ValueError(
+                f"RoundPlan.agg_weights must be ({n},), got "
+                f"{getattr(agg_weights, 'shape', None)}")
+        object.__setattr__(plan, "_validated", True)
+        return plan
+
+    def _check_structure(self, num_clients: Optional[int] = None) -> int:
+        """Shape/dtype checks on array metadata (no value sync)."""
         n = num_clients
         for name in _BOOL_FIELDS:
             arr = getattr(self, name)
@@ -108,6 +146,19 @@ class RoundPlan:
                 raise ValueError(
                     f"RoundPlan.{name} has {arr.shape[0]} entries, "
                     f"expected {n}")
+        return n
+
+    def validate(self, num_clients: Optional[int] = None,
+                 local_steps: Optional[int] = None) -> "RoundPlan":
+        """Shape/dtype/value checks on concrete (host) values.
+
+        Raises ``ValueError`` on malformed plans; returns self so calls
+        chain.  ``local_steps`` (when given) caps ``steps_override`` at
+        the trainer's scan length: requesting more work than the trainer
+        can run would silently truncate training while the timing model
+        charges the full request.  Under tracing the value checks are
+        skipped (abstract arrays have no concrete sums)."""
+        n = self._check_structure(num_clients)
         if isinstance(self.selected, jax.core.Tracer):
             return self
         n_sel = int(np.asarray(self.selected).sum())
@@ -133,6 +184,13 @@ class RoundPlan:
                     f"shape {so.shape} dtype {so.dtype}")
             if (so < 0).any():
                 raise ValueError("RoundPlan.steps_override must be >= 0")
+            if local_steps is not None and so.size \
+                    and int(so.max()) > local_steps:
+                raise ValueError(
+                    f"RoundPlan.steps_override requests up to "
+                    f"{int(so.max())} local steps but the trainer scans "
+                    f"only {local_steps} — the excess would silently not "
+                    f"run while the timing model charged it")
         if self.agg_weights is not None:
             w = np.asarray(self.agg_weights, np.float32)
             if w.shape != (n,):
@@ -154,6 +212,17 @@ class RoundReport:
     durations:(N,) float — per-device finish time, inf if never uploaded.
     duration: float — billed round wall clock (cutoff or deadline).
     rnd:      int — round index.
+
+    On the legacy host-RNG path the array fields are numpy and
+    ``duration`` is a python float.  On the device round path everything
+    but ``rnd`` is a device array (``duration`` a float32 device scalar —
+    the jitted round cut never syncs; rounds that idle-waited the
+    deadline carry the float32-*nearest* cast of ``round_deadline``,
+    which may sit one ulp above it, while History bills the exact f64
+    config value): jnp-native policies fold the
+    report in as one more dispatch, which is what keeps the pipelined
+    loop (``FLConfig.pipeline_depth`` > 1) free of per-round host
+    blocking; host-side policies pay one ``np.asarray`` sync as before.
     """
     received: Any
     fail: Any
@@ -173,10 +242,13 @@ class RoundObservation:
     ``repro.fleet`` dynamics process produced it (None on the legacy
     host-RNG path): jnp-native policies read ``draw.online`` /
     ``draw.bandwidth`` / ``draw.battery`` directly instead of re-uploading
-    the host mask.
+    the host mask.  On that path ``online`` is the *device* mask
+    (``draw.online`` itself — reading it eagerly would stall the
+    pipelined loop); host-side policies convert with ``np.asarray`` at
+    their own sync point.
     """
     rnd: int
-    online: np.ndarray
+    online: Any                # (N,) bool — numpy, or jax on the device path
     caches: ClientCaches
     draw: Optional[Any] = None
 

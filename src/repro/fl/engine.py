@@ -5,9 +5,16 @@ round step (weights + packed aggregation + C3 cache bookkeeping) and the
 fleet simulator; policies are pure ``plan``/``observe`` transitions over
 typed ``RoundPlan``/``RoundReport`` messages (see ``repro.fl.api``).
 
-Global params and client caches stay device-resident across rounds —
-the host only sees (N,)-sized masks/metadata each round, plus the test
-accuracy at eval/progress boundaries (``eval_every``).
+Global params and client caches stay device-resident across rounds.  On
+the device-dynamics round path the round *close* is device-resident too:
+a jitted quorum cut (``core.make_round_cut``) turns the (N,) finish
+times into the cut, the billed duration and the receive mask without a
+host sync, History bookkeeping is deferred through a ``_RoundLedger``
+(read back at eval boundaries and run end), and
+``FLConfig.pipeline_depth`` > 1 lets the host dispatch round k+1's fused
+trainer + server step while round k still executes — trajectories are
+bit-identical at every depth.  The legacy host-RNG loop
+(``bernoulli_host``) keeps the historical numpy close verbatim.
 
 With ``FLConfig.mesh_shape`` set, the fleet lives *sharded* over a
 ``("clients",)`` mesh axis: client training data, the stacked client
@@ -121,7 +128,10 @@ def make_trainer(sim_cfg: SimConfig, data: FederatedClassification,
                 jnp.zeros((x_all.shape[0],), jnp.int32), loss0)
         (params, cache, cached_steps, loss_sum), _ = jax.lax.scan(
             step_fn, init, jnp.arange(max_steps))
-        done = jnp.minimum(steps_needed, stop_step)
+        # normalize by the steps that actually *ran*: the scan is
+        # max_steps long, so a larger request trains (and accumulates
+        # loss over) max_steps at most
+        done = jnp.minimum(jnp.minimum(steps_needed, stop_step), max_steps)
         mean_loss = loss_sum / jnp.maximum(done, 1)
         return params, cache, cached_steps, mean_loss
 
@@ -163,6 +173,9 @@ def make_trainer(sim_cfg: SimConfig, data: FederatedClassification,
         steps_needed, fail, success, times) — times in simulated seconds,
         inf where the device never uploads.
         """
+        # clamp to the scan length: an oversized steps_override would
+        # otherwise charge un-run steps in the timing model below
+        base_steps = jnp.minimum(base_steps, max_steps)
         prior = jnp.round(caches.progress * max_steps).astype(jnp.int32)
         steps_needed = jnp.where(resume, jnp.maximum(base_steps - prior, 1),
                                  base_steps)
@@ -227,6 +240,66 @@ class History:
         return float("inf")
 
 
+class _RoundLedger:
+    """Deferred History bookkeeping for the pipelined device round loop.
+
+    Each round the loop *dispatches* the device scalars one History row
+    needs — billed duration, received/download/selected counts and (at
+    eval boundaries) the round's test accuracy — and pushes the handles
+    here.  ``resolve`` reads rows back oldest-first; the loop calls it
+    with ``keep = pipeline_depth - 1`` so at most that many rounds of
+    bookkeeping stay in flight, and with ``keep=0`` at run end (and every
+    round under a ``time_budget``, whose check needs ``cum_time``).
+
+    The f64 accumulation of ``cum_comm``/``cum_time`` happens here on the
+    host at resolve time, over per-round values that are exact float32 —
+    deadline-capped rounds arrive as a ``capped`` flag and bill the exact
+    (float64) ``round_deadline`` — so trajectories are bit-identical at
+    every depth, and identical to the old eager ``_book_round`` loop.
+    """
+
+    def __init__(self, hist: History, model_mb: float,
+                 round_deadline: float, progress: Optional[Callable]):
+        self.hist = hist
+        self.model_mb = model_mb
+        self.round_deadline = round_deadline
+        self.progress = progress
+        self.pending: List[tuple] = []
+        self.cum_comm = 0.0
+        self.cum_time = 0.0
+        self.acc = float("nan")
+
+    def push(self, rnd, evaluated, duration, capped, received, downloads,
+             selected, acc):
+        """Queue one round's device-scalar bookkeeping handles."""
+        self.pending.append((rnd, evaluated, duration, capped, received,
+                             downloads, selected, acc))
+
+    def resolve(self, keep: int = 0):
+        """Read back (host-sync) all but the newest ``keep`` rounds."""
+        while len(self.pending) > keep:
+            (rnd, evaluated, duration, capped, received, downloads,
+             selected, acc_dev) = self.pending.pop(0)
+            duration, capped, received, downloads, selected = \
+                jax.device_get((duration, capped, received, downloads,
+                                selected))
+            self.cum_comm += (int(downloads) + int(received)) \
+                * self.model_mb
+            self.cum_time += self.round_deadline if bool(capped) \
+                else float(duration)
+            if evaluated:
+                self.acc = float(jax.device_get(acc_dev))
+            hist = self.hist
+            hist.acc.append(self.acc)
+            hist.eval_mask.append(evaluated)
+            hist.comm_mb.append(self.cum_comm)
+            hist.wall_clock.append(self.cum_time)
+            hist.received.append(int(received))
+            hist.selected.append(int(selected))
+            if self.progress and rnd % 10 == 0:
+                self.progress(rnd, self.acc, self.cum_comm, self.cum_time)
+
+
 # ---------------------------------------------------------------------------
 # FleetEngine
 # ---------------------------------------------------------------------------
@@ -256,6 +329,10 @@ class FleetEngine:
         self._fleet = fleet
         self.mesh = self._build_mesh(fl_cfg)
         self.donate = bool(fl_cfg.donate_buffers)
+        self.pipeline_depth = int(fl_cfg.pipeline_depth)
+        if self.pipeline_depth < 1:
+            raise ValueError(f"FLConfig.pipeline_depth must be >= 1, got "
+                             f"{fl_cfg.pipeline_depth}")
         self._trainer = None      # legacy trainer, built on first host run
         self._acc_fn = jax.jit(CLF.clf_accuracy)
         self._server_steps = {}
@@ -277,6 +354,7 @@ class FleetEngine:
         get_dynamics(fl_cfg.dynamics)          # fail fast on unknown names
         self._dyn_cache = {}
         self._round_consts = {}
+        self._cut_fns = {}                     # jitted round cut per trait
 
     def _build_mesh(self, fl_cfg: FLConfig):
         if fl_cfg.mesh_shape is None:
@@ -391,8 +469,13 @@ class FleetEngine:
         ``bernoulli_host`` runs the seed simulator's host-RNG loop
         (bit-identical golden trajectories); every other registered
         process (``repro.fleet``) runs the device-resident loop — draws,
-        workload, failures and timing are produced on device, sharded
-        over the client mesh, with no per-round host→device hand-off."""
+        workload, failures, timing AND the round cut are produced on
+        device, sharded over the client mesh, with no per-round
+        host→device hand-off.  On that loop ``FLConfig.pipeline_depth``
+        > 1 keeps up to depth-1 rounds of bookkeeping in flight (History
+        is read back at eval boundaries and run end), overlapping round
+        k+1's dispatches with round k's device execution; trajectories
+        are bit-identical at every depth."""
         sim_cfg, fl_cfg = self.sim_cfg, self.fl_cfg
         fleet = self._fleet if self._fleet is not None else Fleet(sim_cfg)
         if isinstance(policy, str):
@@ -419,6 +502,16 @@ class FleetEngine:
             policy, state, fleet, hist, global_params, caches, rng,
             n_rounds, time_budget, eval_every, progress)
 
+        # a time_budget break can land between eval boundaries, leaving
+        # the final booked round with a stale carried-forward (or NaN)
+        # accuracy — force a measurement on the final global model so
+        # time/comm_to_accuracy and "final acc" reports see fresh data
+        if time_budget is not None and hist.eval_mask \
+                and not hist.eval_mask[-1]:
+            hist.acc[-1] = float(self._acc_fn(global_params, self._test_x,
+                                              self._test_y))
+            hist.eval_mask[-1] = True
+
         # final diagnostics (paper Fig. 1(b)(c))
         if diagnostics:
             hist.per_class_acc = np.asarray(CLF.clf_per_class_accuracy(
@@ -442,29 +535,55 @@ class FleetEngine:
 
     def _close_round(self, times, plan, policy):
         """Round termination (Algorithm 2 lines 13–16) on the per-device
-        finish times (host numpy, inf = never uploads); returns
-        ``(t_cut, duration)`` — shared by both round loops so the quorum
-        rule can never diverge between dynamics paths."""
-        sim_cfg = self.sim_cfg
-        quorum = int(np.ceil(plan.quorum))
-        finite = np.sort(times[np.isfinite(times)])
-        if finite.size >= quorum and quorum > 0:
-            t_cut = min(float(finite[quorum - 1]), sim_cfg.round_deadline)
-        elif not policy.waits_for_stragglers and finite.size > 0:
-            # async/semi-async designs close at the last arrival
-            t_cut = min(float(finite[-1]), sim_cfg.round_deadline)
+        finish times — the host numpy path, kept for the legacy host-RNG
+        loop (and as the property-test reference of the jitted cut)."""
+        return core.host_round_cut(times, float(np.asarray(plan.quorum)),
+                                   self.sim_cfg.round_deadline,
+                                   policy.waits_for_stragglers)
+
+    def _round_cut(self, waits_for_stragglers: bool):
+        """Memoized jitted device round cut (one variant per the policy's
+        straggler trait) — ``(times, quorum, success) -> (t_cut, duration,
+        received)``, everything device-resident."""
+        key = bool(waits_for_stragglers)
+        if key not in self._cut_fns:
+            self._cut_fns[key] = core.make_round_cut(
+                self.fl_cfg.num_clients, self.sim_cfg.round_deadline,
+                key, mesh=self.mesh)
+        return self._cut_fns[key]
+
+    def _validate_plan(self, plan):
+        """Per-round plan admission, shared by both loops.  Plans built
+        through ``RoundPlan.create``/``RoundPlan.device`` already ran
+        their checks — only fleet-size agreement (and, for host-side
+        overrides, the scan-length cap) is left to confirm."""
+        fl_cfg, sim_cfg = self.fl_cfg, self.sim_cfg
+        if getattr(plan, "_validated", False):
+            if plan.selected.shape[0] != fl_cfg.num_clients:
+                raise ValueError(
+                    f"RoundPlan sized {plan.selected.shape[0]} for a "
+                    f"{fl_cfg.num_clients}-client fleet")
+            so = plan.steps_override
+            if so is not None and not isinstance(so, jax.Array) \
+                    and np.asarray(so).size \
+                    and int(np.asarray(so).max()) > sim_cfg.local_steps:
+                raise ValueError(
+                    f"RoundPlan.steps_override requests up to "
+                    f"{int(np.asarray(so).max())} local steps but the "
+                    f"trainer scans only {sim_cfg.local_steps}")
         else:
-            t_cut = sim_cfg.round_deadline
-        duration = t_cut if np.isfinite(t_cut) else sim_cfg.round_deadline
-        return t_cut, duration
+            plan.validate(fl_cfg.num_clients,
+                          local_steps=sim_cfg.local_steps)
 
     def _book_round(self, hist, rnd, n_rounds, eval_every, global_params,
-                    distribute, received, selected, duration, cum_comm,
+                    downloads, received, selected, duration, cum_comm,
                     cum_time, acc, progress):
         """Comm/time accumulation, eval cadence and the History appends
         for one round; returns the updated ``(cum_comm, cum_time, acc)``.
-        ``distribute``/``received``/``selected`` are host (N,) bools."""
-        cum_comm += (distribute.sum() + received.sum()) \
+        ``downloads``/``received``/``selected`` are host (N,) bools —
+        ``downloads`` is the distribute mask already gated by the round's
+        online mask (§4.4 only transmits to reachable devices)."""
+        cum_comm += (downloads.sum() + received.sum()) \
             * self.sim_cfg.model_mb
         cum_time += duration
         evaluated = rnd % eval_every == 0 or rnd == n_rounds - 1
@@ -515,25 +634,18 @@ class FleetEngine:
             online = fleet.online_mask()
             state, plan = policy.plan(
                 state, RoundObservation(rnd, online, caches), k_sel)
-            if getattr(plan, "_validated", False):
-                # RoundPlan.create already ran the full checks; only the
-                # fleet-size agreement is left to confirm
-                if plan.selected.shape[0] != fl_cfg.num_clients:
-                    raise ValueError(
-                        f"RoundPlan sized {plan.selected.shape[0]} for a "
-                        f"{fl_cfg.num_clients}-client fleet")
-            else:
-                plan.validate(fl_cfg.num_clients)
+            self._validate_plan(plan)
             selected = np.asarray(plan.selected)
             distribute = np.asarray(plan.distribute)
             resume = np.asarray(plan.resume)
 
-            # per-device workload
+            # per-device workload (override clamped to the scan length)
             prior_steps = np.round(
                 np.asarray(caches.progress) * sim_cfg.local_steps
             ).astype(np.int32)
             base_steps = full_steps if plan.steps_override is None \
-                else np.asarray(plan.steps_override)
+                else np.minimum(np.asarray(plan.steps_override),
+                                sim_cfg.local_steps)
             steps_needed = np.where(resume,
                                     np.maximum(base_steps - prior_steps, 1),
                                     base_steps).astype(np.int32)
@@ -578,9 +690,9 @@ class FleetEngine:
                             duration=duration, rnd=rnd))
 
             cum_comm, cum_time, acc = self._book_round(
-                hist, rnd, n_rounds, eval_every, global_params, distribute,
-                received, selected, duration, cum_comm, cum_time, acc,
-                progress)
+                hist, rnd, n_rounds, eval_every, global_params,
+                distribute & online, received, selected, duration,
+                cum_comm, cum_time, acc, progress)
 
         return state, global_params, caches
 
@@ -588,10 +700,11 @@ class FleetEngine:
 
     def _dynamics_fns(self, fleet):
         """Memoized device-dynamics artifacts for the configured process:
-        (process, jitted init, jitted step, fused dynamics trainer, jitted
-        receive cut).  The jitted step applies the fleet sharding
-        constraint so draws stay sharded over the client mesh no matter
-        what the process body produced."""
+        (process, jitted init, jitted step, fused dynamics trainer).  The
+        jitted step applies the fleet sharding constraint so draws stay
+        sharded over the client mesh no matter what the process body
+        produced.  (The round cut is memoized separately per straggler
+        trait — see ``_round_cut``.)"""
         key = (self.fl_cfg.dynamics, self.fl_cfg.dynamics_params)
         if key not in self._dyn_cache:
             N = self.fl_cfg.num_clients
@@ -610,10 +723,8 @@ class FleetEngine:
                 process.init_state(k), mesh, N))
             trainer = make_trainer(self.sim_cfg, self.data, mesh=mesh,
                                    dynamics_features=feats)
-            received_fn = jax.jit(
-                lambda success, times, cut: success & (times <= cut))
             self._dyn_cache[key] = (process, init_fn, jax.jit(step),
-                                    trainer, received_fn)
+                                    trainer)
         return self._dyn_cache[key]
 
     def _dyn_consts(self, fleet, uses_cache):
@@ -648,45 +759,46 @@ class FleetEngine:
                        caches, rng, n_rounds, time_budget, eval_every,
                        progress):
         """Dynamics round loop: the round's availability/failure draw,
-        workload, local training and timing model run on device (sharded
-        over the client mesh) in two jitted dispatches (process step +
-        fused trainer) plus the fused server step.  The host only *reads*
-        (N,) masks and times back for planning, the quorum cut and
-        bookkeeping — nothing per-round is uploaded through
-        ``place_per_client``."""
-        sim_cfg, fl_cfg = self.sim_cfg, self.fl_cfg
+        workload, local training, timing model AND the quorum cut run on
+        device (sharded over the client mesh) — process step, fused
+        trainer, round cut, fused server step, four dispatches with no
+        host value in between.  Bookkeeping is deferred through a
+        ``_RoundLedger``: History rows are read back only when the
+        pipeline depth forces it, at eval boundaries (the accuracy
+        scalar), or at run end — with ``pipeline_depth`` > 1 the host
+        dispatches round k+1 while round k still executes.  jnp-native
+        policies (flude) keep even planning on device; host-side policies
+        sync at their own ``np.asarray`` boundaries as before."""
+        sim_cfg = self.sim_cfg
         n_samples = self._n_samples
-        process, init_fn, step_fn, trainer, received_fn = \
-            self._dynamics_fns(fleet)
+        process, init_fn, step_fn, trainer = self._dynamics_fns(fleet)
         cache_every, ones_w, full_steps = self._dyn_consts(
             fleet, policy.uses_cache)
         server_step = self._server_step(policy.uses_cache)
+        cut_fn = self._round_cut(policy.waits_for_stragglers)
+        ledger = _RoundLedger(hist, sim_cfg.model_mb,
+                              sim_cfg.round_deadline, progress)
 
         # independent dynamics key stream, reproducible per run
         dyn_base = jax.random.fold_in(jax.random.key(sim_cfg.seed),
                                       0x0F1EE7)
         fstate = init_fn(jax.random.fold_in(dyn_base, 1 << 20))
 
-        cum_comm = 0.0
-        cum_time = 0.0
-        acc = float("nan")
         draw = None
         for rnd in range(n_rounds):
-            if time_budget is not None and cum_time >= time_budget:
-                break
+            if time_budget is not None:
+                # the budget check needs cum_time: resolve everything
+                # in flight (budget runs are effectively depth 1)
+                ledger.resolve()
+                if ledger.cum_time >= time_budget:
+                    break
             rng, k_sel = jax.random.split(rng)
             fstate, draw = step_fn(fstate,
                                    jax.random.fold_in(dyn_base, rnd))
             state, plan = policy.plan(
-                state, RoundObservation(rnd, np.asarray(draw.online),
-                                        caches, draw=draw), k_sel)
-            if getattr(plan, "_validated", False):
-                if plan.selected.shape[0] != fl_cfg.num_clients:
-                    raise ValueError(
-                        f"RoundPlan sized {plan.selected.shape[0]} for a "
-                        f"{fl_cfg.num_clients}-client fleet")
-            else:
-                plan.validate(fl_cfg.num_clients)
+                state, RoundObservation(rnd, draw.online, caches,
+                                        draw=draw), k_sel)
+            self._validate_plan(plan)
             sel_d = self._from_plan(plan.selected)
             dist_d = self._from_plan(plan.distribute)
             res_d = self._from_plan(plan.resume)
@@ -700,11 +812,10 @@ class FleetEngine:
                                        dist_d, res_d, base_steps,
                                        cache_every)
 
-            # round termination on the device-computed times; the cut is
-            # a host scalar, the receive mask stays on device
-            times_h = np.asarray(times)
-            t_cut, duration = self._close_round(times_h, plan, policy)
-            received = received_fn(success, times, t_cut)
+            # round termination on device: the cut is a device scalar and
+            # the receive mask stays sharded; deadline-capped rounds come
+            # back as a flag so the ledger bills the exact f64 deadline
+            t_cut, received, capped = cut_fn(times, plan.quorum, success)
 
             extra_w = ones_w if plan.agg_weights is None else \
                 self._from_plan(plan.agg_weights, np.float32)
@@ -712,19 +823,23 @@ class FleetEngine:
                 global_params, caches, final, cache_p, cached_steps,
                 sel_d, fail, received, res_d, n_samples, extra_w, rnd)
 
-            received_h = np.asarray(received)
             state = policy.observe(
                 state, plan,
-                RoundReport(received=received_h, fail=np.asarray(fail),
-                            losses=np.asarray(losses), durations=times_h,
-                            duration=duration, rnd=rnd))
+                RoundReport(received=received, fail=fail, losses=losses,
+                            durations=times, duration=t_cut, rnd=rnd))
 
-            cum_comm, cum_time, acc = self._book_round(
-                hist, rnd, n_rounds, eval_every, global_params,
-                np.asarray(plan.distribute), received_h,
-                np.asarray(plan.selected), duration, cum_comm, cum_time,
-                acc, progress)
+            evaluated = rnd % eval_every == 0 or rnd == n_rounds - 1
+            acc_dev = self._acc_fn(global_params, self._test_x,
+                                   self._test_y) if evaluated else None
+            ledger.push(rnd, evaluated, t_cut, capped, received.sum(),
+                        draw.download_mask(dist_d).sum(), sel_d.sum(),
+                        acc_dev)
+            if progress and rnd % 10 == 0:
+                ledger.resolve()        # live ticks resolve on schedule
+            else:
+                ledger.resolve(keep=self.pipeline_depth - 1)
 
+        ledger.resolve()
         # pipelining seam: the process state (and last draw) stay
         # device-resident between runs, like the caches
         self._last_fleet_state = fstate

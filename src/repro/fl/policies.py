@@ -87,14 +87,26 @@ class FludePolicy(Policy):
         return FludePolicyState(core.init_state(self.fl_cfg), None)
 
     def plan(self, state, obs: RoundObservation, rng):
-        # with a device-resident fleet draw the online mask never leaves
-        # the device; the legacy host path re-uploads the numpy mask
-        online = obs.draw.online if obs.draw is not None \
-            else jnp.asarray(obs.online)
-        p = self._plan_jit(state.core, obs.caches, online, rng, self._hints)
+        if obs.draw is not None:
+            # device round path: the online mask, the plan AND the quorum
+            # clamp stay on device, and RoundPlan.device runs structural
+            # checks only — planning is a pure dispatch, so the pipelined
+            # engine loop never drains the device queue here.  The f32
+            # minimum matches the host path's float() min bit-for-bit
+            # (both operands are exact float32 values).
+            p = self._plan_jit(state.core, obs.caches, obs.draw.online,
+                               rng, self._hints)
+            quorum = jnp.minimum(p.quorum,
+                                 p.selected.sum().astype(jnp.float32))
+            plan = RoundPlan.device(p.selected, p.distribute, p.resume,
+                                    quorum)
+            return FludePolicyState(state.core, p), plan
+        # legacy host-RNG path: re-upload the numpy mask, validate on host
+        p = self._plan_jit(state.core, obs.caches, jnp.asarray(obs.online),
+                           rng, self._hints)
         quorum = min(float(p.quorum), float(p.selected.sum()))
-        # masks stay jax arrays: the engine's device round path consumes
-        # them in place, and the host path's np.asarray sees equal values
+        # masks stay jax arrays: the engine consumes them in place, and
+        # the host path's np.asarray sees equal values
         plan = RoundPlan.create(p.selected, p.distribute, p.resume, quorum)
         return FludePolicyState(state.core, p), plan
 

@@ -121,6 +121,15 @@ class FleetDraw:
         return jnp.floor(self.stop_u * jnp.maximum(steps, 1)).astype(
             jnp.int32)
 
+    def download_mask(self, distribute):
+        """Downloads that actually happen this round.
+
+        §4.4 transmits the fresh model only to *reachable* devices: a
+        device the plan marks for distribution but the draw finds offline
+        never receives it, so comm accounting must not bill the transfer.
+        """
+        return jnp.asarray(distribute) & self.online
+
 
 for _cls, _data in ((FleetState, ["t", "slot"]),
                     (FleetDraw, ["online", "fail_p", "fail_u", "stop_u",

@@ -206,6 +206,22 @@ def fleet_constraint(tree, mesh: Optional[Mesh], num_clients: int):
     return jax.tree.map(one, tree)
 
 
+def replicated_constraint(tree, mesh: Optional[Mesh]):
+    """``with_sharding_constraint`` every leaf to fully-replicated inside
+    jit (identity when ``mesh`` is None).
+
+    Applied to the device scalars the round loop hands to the host-side
+    ledger (round cut, billed duration, History counters): they are
+    reductions over ``("clients",)``-sharded arrays, and pinning them
+    replicated guarantees the deferred readback never depends on which
+    shard GSPMD happened to leave the value on."""
+    if mesh is None:
+        return tree
+    rep = NamedSharding(mesh, P())
+    return jax.tree.map(
+        lambda leaf: jax.lax.with_sharding_constraint(leaf, rep), tree)
+
+
 def place_fleet(tree, mesh: Optional[Mesh], num_clients: int):
     """``jax.device_put`` a client-stacked pytree onto the fleet mesh
     (identity when ``mesh`` is None — the single-device path)."""

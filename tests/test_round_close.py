@@ -1,0 +1,441 @@
+"""Device-resident round close + pipelined device loop.
+
+Covers the tentpole invariants of the pipelined engine:
+  * the jitted round cut (``core.make_round_cut``) matches the numpy
+    reference (``core.host_round_cut``) bit-for-bit on float32 times —
+    hypothesis property tests over inf-heavy times, quorum 0/1/N and the
+    async (``waits_for_stragglers=False``) close-at-last-arrival path;
+  * ``pipeline_depth`` changes scheduling only: trajectories are
+    identical at depths 1/2/4 for every registered policy;
+  * the ``time_budget`` stale-final-accuracy fix, the ``steps_override``
+    over-charging fix, and the offline-download comm accounting fix.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.configs.base import FLConfig
+from repro.data.synthetic import federated_classification
+from repro.fl import (Fleet, FleetEngine, Policy, RoundObservation,
+                      RoundPlan, SimConfig, available_policies,
+                      make_trainer, register_policy)
+from repro.fl import api as API
+
+DEADLINE = 600.0
+
+
+def _ref(times, quorum, waits, deadline=DEADLINE):
+    return core.host_round_cut(times, quorum, deadline, waits)
+
+
+def _check(times, quorum, waits, deadline=DEADLINE):
+    """Jitted cut == numpy reference (cut, billed duration, receive
+    mask), applying the ledger's billing rule for deadline-capped rounds
+    (``deadline if capped else float(t_cut)`` — the float64 deadline may
+    not be float32-representable)."""
+    times = np.asarray(times, np.float32)
+    success = np.isfinite(times)
+    t_ref, d_ref = _ref(times, quorum, waits, deadline)
+    cut = core.make_round_cut(times.shape[0], deadline, waits)
+    t_dev, recv, capped = cut(jnp.asarray(times), quorum,
+                              jnp.asarray(success))
+    billed = deadline if bool(capped) else float(t_dev)
+    assert billed == t_ref, (billed, t_ref)
+    assert billed == d_ref
+    # receive reference: float32 compare against the float32-nearest cast
+    # of the host cut — the engine's receive semantics since PR 4 (the
+    # old jitted received_fn weak-cast the f64 cut to f32)
+    np.testing.assert_array_equal(
+        np.asarray(recv), success & (times <= np.float32(t_ref)))
+
+
+# ---------------------------------------------------------------------------
+# Jitted cut vs numpy reference (seeded sweep; the hypothesis variants
+# live in tests/test_round_close_properties.py)
+# ---------------------------------------------------------------------------
+
+def _times_case(n, inf_rate, seed):
+    """(N,) float32 finish times with an ``inf_rate`` share of
+    never-uploads (inf), like the engine's timing model produces."""
+    rng = np.random.RandomState(seed)
+    t = rng.uniform(1.0, 2.0 * DEADLINE, n).astype(np.float32)
+    t[rng.rand(n) < inf_rate] = np.inf
+    return t
+
+
+@pytest.mark.parametrize("waits", [True, False])
+def test_cut_matches_host_reference_sweep(waits):
+    """Deterministic sweep over fleet sizes, inf densities and quorums —
+    the jitted cut must reproduce the numpy reference exactly (the
+    hypothesis property test widens this search space on CI)."""
+    rng = np.random.RandomState(7)
+    for case in range(60):
+        n = int(rng.randint(1, 65))
+        inf_rate = float(rng.rand())
+        times = _times_case(n, inf_rate, case)
+        finite = int(np.isfinite(times).sum())
+        quorums = {0.0, 1.0, float(n), float(min(finite + 1, n)),
+                   float(rng.randint(0, n + 1)),
+                   float(np.float32(rng.rand() * n))}
+        for q in quorums:
+            _check(times, q, waits)
+
+
+@pytest.mark.parametrize("waits", [True, False])
+def test_cut_non_float32_deadline_bills_exact_config_value(waits):
+    """round_deadline values float32 cannot represent (100.3) must bill
+    exactly on capped rounds — the cut returns a cap *flag* (decided via
+    the largest float32 ≤ deadline, so ``t > deadline`` is exact) and the
+    ledger substitutes the float64 config value, while the receive
+    compare keeps the engine's float32-nearest semantics."""
+    for deadline in (100.3, 600.1, 599.9999999):
+        assert float(np.float32(deadline)) != deadline   # the hard case
+        for seed in range(6):
+            times = _times_case(12, 0.5, seed)
+            for q in (1.0, 6.0, 12.0, 13.0):
+                _check(times, q, waits, deadline=deadline)
+        # a device finishing at exactly float32-nearest(deadline), just
+        # above the true deadline: billed duration stays the exact f64
+        # deadline, and the receive mask matches the engine's f32 rule
+        edge = np.asarray([1.0, float(np.float32(deadline)), np.inf],
+                          np.float32)
+        _check(edge, 2.0, waits, deadline=deadline)
+
+
+def test_cut_async_closes_at_last_arrival():
+    """waits_for_stragglers=False with an unmet quorum closes at the last
+    finite arrival (deadline-capped) instead of idle-waiting."""
+    for seed in range(8):
+        times = _times_case(24, 0.6, seed)
+        finite = np.sort(times[np.isfinite(times)])
+        q = float(finite.size + 1)      # quorum never met
+        _check(times, q, waits=False)
+        if finite.size:
+            cut = core.make_round_cut(24, DEADLINE, False)
+            t_dev, _, capped = cut(jnp.asarray(times), q,
+                                   jnp.asarray(np.isfinite(times)))
+            billed = DEADLINE if bool(capped) else float(t_dev)
+            assert billed == min(float(finite[-1]), DEADLINE)
+
+
+def test_cut_all_inf_times_hits_deadline():
+    times = np.full(7, np.inf, np.float32)
+    for waits in (True, False):
+        _check(times, 3.0, waits)
+        cut = core.make_round_cut(7, DEADLINE, waits)
+        t, recv, capped = cut(jnp.asarray(times), 3.0, jnp.zeros(7, bool))
+        assert bool(capped) and float(t) == DEADLINE
+        assert not np.asarray(recv).any()
+
+
+def test_cut_respects_small_deadline():
+    times = np.asarray([1.0, 2.0, 50.0, np.inf], np.float32)
+    _check(times, 3.0, True, deadline=10.0)
+    cut = core.make_round_cut(4, 10.0, True)
+    t, recv, capped = cut(jnp.asarray(times), 3.0,
+                          jnp.asarray(np.isfinite(times)))
+    assert bool(capped) and float(t) == 10.0
+    np.testing.assert_array_equal(np.asarray(recv),
+                                  [True, True, False, False])
+
+
+# ---------------------------------------------------------------------------
+# Pipeline depth changes scheduling only
+# ---------------------------------------------------------------------------
+
+def _setup(n=16, rounds=3, **fl_kw):
+    data = federated_classification(n, seed=0, n_per_client=32)
+    sim = SimConfig(num_clients=n, rounds=rounds, seed=0, local_steps=2)
+    fl = FLConfig(num_clients=n, clients_per_round=8, **fl_kw)
+    return data, sim, fl
+
+
+def _rows(h):
+    return (h.acc, h.wall_clock, h.comm_mb, h.received, h.selected,
+            h.eval_mask)
+
+
+@pytest.mark.parametrize("policy", sorted(
+    p for p in available_policies() if not p.startswith("_")))
+def test_pipeline_depth_trajectory_parity(policy):
+    """Depths 1/2/4 produce identical History rows for every registered
+    policy on the device round path (depth > rounds exercises the
+    flush-at-end path too)."""
+    data, sim, fl = _setup(dynamics="bernoulli")
+    ref = FleetEngine(data, sim, fl).run(policy, eval_every=2,
+                                         diagnostics=False)
+    for depth in (2, 4):
+        fl_d = dataclasses.replace(fl, pipeline_depth=depth)
+        h = FleetEngine(data, sim, fl_d).run(policy, eval_every=2,
+                                             diagnostics=False)
+        assert _rows(h) == _rows(ref), (policy, depth)
+
+
+def test_pipeline_depth_parity_with_donation():
+    """Buffer donation + rounds in flight is the riskiest aliasing combo:
+    the server step recycles the previous global/caches while the ledger
+    still holds round k's scalars — values must not change."""
+    data, sim, fl = _setup(dynamics="bernoulli")
+    ref = FleetEngine(data, sim, fl).run("flude", eval_every=2,
+                                         diagnostics=False)
+    fl_d = dataclasses.replace(fl, donate_buffers=True, pipeline_depth=3)
+    engine = FleetEngine(data, sim, fl_d)
+    h1 = engine.run("flude", eval_every=2, diagnostics=False)
+    h2 = engine.run("flude", eval_every=2, diagnostics=False)
+    assert _rows(h1) == _rows(ref) and _rows(h2) == _rows(ref)
+
+
+def test_pipeline_depth_validated():
+    data, sim, fl = _setup(pipeline_depth=0)
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        FleetEngine(data, sim, fl)
+
+
+def test_pipelined_progress_callback_sees_each_round():
+    data, sim, fl = _setup(rounds=3, dynamics="bernoulli",
+                           pipeline_depth=2)
+    seen = []
+    FleetEngine(data, sim, fl).run(
+        "flude", diagnostics=False,
+        progress=lambda rnd, acc, comm, time: seen.append(rnd))
+    assert seen == [0]          # rnd % 10 == 0 ticks, resolved in order
+
+
+# ---------------------------------------------------------------------------
+# Bugfix: time_budget break leaves a stale final accuracy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dynamics", ["bernoulli_host", "bernoulli"])
+def test_time_budget_forces_final_eval(dynamics):
+    """A budget break between eval boundaries used to leave hist.acc[-1]
+    as a stale carried-forward value; the engine now forces an eval of
+    the final global model on the last booked round."""
+    data, sim, fl = _setup(rounds=30, dynamics=dynamics)
+    engine = FleetEngine(data, sim, fl)
+    # budget chosen to stop after a handful of rounds, off eval cadence
+    h = engine.run("random", time_budget=3 * sim.round_deadline,
+                   eval_every=100)
+    assert 1 < len(h.acc) < 30          # the budget actually bit
+    assert h.eval_mask[-1]
+    from repro.fl.classifier import clf_accuracy
+    fresh = float(jax.jit(clf_accuracy)(
+        h.final_params, jnp.asarray(data.test_x),
+        jnp.asarray(data.test_y)))
+    assert h.acc[-1] == pytest.approx(fresh, abs=0)
+    # the stale value it replaced came from the round-0 eval
+    assert h.eval_mask[0] and not any(h.eval_mask[1:-1])
+
+
+def test_round_cap_termination_needs_no_forced_eval():
+    """Runs that exhaust n_rounds always evaluate the last round — the
+    forced final eval must not fire (eval_mask semantics unchanged)."""
+    data, sim, fl = _setup(rounds=5)
+    h = FleetEngine(data, sim, fl).run("random", eval_every=2)
+    assert h.eval_mask == [True, False, True, False, True]
+
+
+# ---------------------------------------------------------------------------
+# Bugfix: steps_override over-charging
+# ---------------------------------------------------------------------------
+
+def test_oversized_steps_override_rejected():
+    """An override beyond the trainer's scan length is caught at plan
+    validation instead of silently truncating training while the timing
+    model charges the full request."""
+
+    @register_policy("_test_oversized_steps")
+    class Oversized(Policy):
+        def plan(self, state, obs, rng):
+            n = self.fl_cfg.num_clients
+            sel = np.asarray(obs.online).copy()
+            return state, RoundPlan(
+                sel, sel, np.zeros(n, bool), float(max(sel.sum(), 1)),
+                steps_override=np.full(n, 99, np.int32))
+    try:
+        data, sim, fl = _setup(rounds=1)
+        with pytest.raises(ValueError, match="steps_override"):
+            FleetEngine(data, sim, fl).run("_test_oversized_steps")
+        with pytest.raises(ValueError, match="steps_override"):
+            FleetEngine(data, sim, dataclasses.replace(
+                fl, dynamics="bernoulli")).run("_test_oversized_steps")
+    finally:
+        API._REGISTRY.pop("_test_oversized_steps", None)
+
+
+def test_roundplan_validate_steps_cap():
+    sel = np.ones(4, bool)
+    plan = RoundPlan.create(sel, sel, np.zeros(4, bool), 4.0,
+                            steps_override=np.full(4, 8, np.int32))
+    plan.validate(4)                     # no cap given: still fine
+    with pytest.raises(ValueError, match="scans only 2"):
+        plan.validate(4, local_steps=2)
+
+
+def test_trainer_clamps_steps_and_loss_normalization():
+    """Requesting more steps than the scan runs must behave exactly like
+    requesting the scan length: same params, same cached steps, and a
+    mean_loss divided by the steps actually executed (not the request)."""
+    n = 8
+    data = federated_classification(n, seed=3, n_per_client=16)
+    sim = SimConfig(num_clients=n, local_steps=2, batch_size=8)
+    trainer = make_trainer(sim, data)
+    from repro.fl.classifier import init_classifier
+    params = init_classifier(jax.random.key(0), dim=data.x.shape[-1],
+                             num_classes=data.num_classes)
+    caches = core.init_caches(params, n)
+    stop = jnp.full((n,), 1 << 20, jnp.int32)
+    ce = jnp.ones((n,), jnp.int32)
+    resume = jnp.zeros((n,), bool)
+
+    ref = trainer(params, caches, resume,
+                  jnp.full((n,), 2, jnp.int32), stop, ce)
+    over = trainer(params, caches, resume,
+                   jnp.full((n,), 7, jnp.int32), stop, ce)
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(over)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dynamics_trainer_charges_executed_steps_only():
+    """On the device round path an oversized (device-array) override is
+    clamped inside the fused trainer: workload, timing and losses match
+    a local_steps request exactly."""
+
+    def probe(times_box, steps):
+        @register_policy("_test_steps_probe", allow_override=True)
+        class Probe(Policy):
+            waits_for_stragglers = True
+
+            def plan(self, state, obs, rng):
+                n = self.fl_cfg.num_clients
+                sel = np.asarray(obs.online).copy()
+                return state, RoundPlan.device(
+                    obs.draw.online, obs.draw.online,
+                    jnp.zeros(n, bool),
+                    jnp.float32(max(int(sel.sum()), 1)),
+                    steps_override=jnp.full(n, steps, jnp.int32))
+
+            def observe(self, state, plan, report):
+                times_box.append(np.asarray(report.durations))
+                return state
+
+    data, sim, fl = _setup(rounds=1, dynamics="bernoulli")
+    out = {}
+    for steps in (2, 9):
+        box = []
+        probe(box, steps)
+        h = FleetEngine(data, sim, fl).run("_test_steps_probe",
+                                           diagnostics=False)
+        out[steps] = (box[0], h.wall_clock, h.comm_mb)
+    API._REGISTRY.pop("_test_steps_probe", None)
+    np.testing.assert_array_equal(out[2][0], out[9][0])
+    assert out[2][1] == out[9][1] and out[2][2] == out[9][2]
+
+
+# ---------------------------------------------------------------------------
+# Bugfix: downloads to offline devices must not bill comm
+# ---------------------------------------------------------------------------
+
+class _PushToAll(Policy):
+    """Selects online devices but marks *everyone* for distribution —
+    the §4.4 server only reaches online devices, so offline 'downloads'
+    must not be billed."""
+
+    def init_state(self):
+        return np.random.RandomState(self.sim_cfg.seed + 5)
+
+    def plan(self, state, obs, rng):
+        n = self.fl_cfg.num_clients
+        online = np.asarray(obs.online)
+        sel = np.zeros(n, bool)
+        idx = np.flatnonzero(online)
+        take = min(self.fl_cfg.clients_per_round, idx.size)
+        sel[state.choice(idx, take, replace=False)] = True
+        return state, RoundPlan.create(sel, np.ones(n, bool),
+                                       np.zeros(n, bool), float(take))
+
+
+def test_comm_counts_only_online_downloads_host_loop():
+    API._REGISTRY["_test_push_all"] = _PushToAll
+    try:
+        data, sim, fl = _setup(rounds=1)
+        h = FleetEngine(data, sim, fl).run("_test_push_all",
+                                           diagnostics=False)
+        online = Fleet(sim).online_mask()      # same seed ⇒ same draw
+        expect = (int(online.sum()) + h.received[0]) * sim.model_mb
+        assert h.comm_mb[0] == pytest.approx(expect, abs=0)
+        assert h.comm_mb[0] < (len(online) + h.received[0]) * sim.model_mb
+    finally:
+        API._REGISTRY.pop("_test_push_all", None)
+
+
+def test_comm_counts_only_online_downloads_device_loop():
+    API._REGISTRY["_test_push_all"] = _PushToAll
+    try:
+        data, sim, fl = _setup(rounds=1, dynamics="bernoulli")
+        engine = FleetEngine(data, sim, fl)
+        h = engine.run("_test_push_all", diagnostics=False)
+        online = np.asarray(engine._last_draw.online)
+        expect = (int(online.sum()) + h.received[0]) * sim.model_mb
+        assert h.comm_mb[0] == pytest.approx(expect, abs=0)
+    finally:
+        API._REGISTRY.pop("_test_push_all", None)
+
+
+@pytest.mark.parametrize("dynamics", ["bernoulli_host", "bernoulli"])
+def test_builtin_policies_never_distribute_offline(dynamics):
+    """Every built-in's *raw* distribute mask is a subset of the round's
+    online mask, so gating download accounting by online changes none of
+    their (golden) comm trajectories — asserted against the un-gated
+    plans instead of regenerating the goldens."""
+    from repro.fl import make_policy
+    data, sim, fl = _setup(rounds=3, dynamics=dynamics)
+    fl = dataclasses.replace(fl, clients_per_round=16)  # push selection
+    for name in sorted(p for p in available_policies()
+                       if not p.startswith("_")):
+        engine = FleetEngine(data, sim, fl)
+        pol = make_policy(name, sim, fl, Fleet(sim))
+        offline_downloads = []
+        orig_plan = pol.plan
+
+        def probing_plan(state, obs, rng, _orig=orig_plan):
+            state, plan = _orig(state, obs, rng)
+            offline_downloads.append(int(
+                (np.asarray(plan.distribute)
+                 & ~np.asarray(obs.online)).sum()))
+            return state, plan
+
+        pol.plan = probing_plan
+        engine.run(pol, diagnostics=False)
+        assert offline_downloads and not any(offline_downloads), name
+
+
+# ---------------------------------------------------------------------------
+# RoundPlan.device: structural checks without value sync
+# ---------------------------------------------------------------------------
+
+def test_roundplan_device_keeps_quorum_on_device():
+    sel = jnp.ones(8, bool)
+    p = RoundPlan.device(sel, sel, jnp.zeros(8, bool), jnp.float32(3.0))
+    assert isinstance(p.quorum, jax.Array)
+    assert getattr(p, "_validated", False)
+
+
+def test_roundplan_device_rejects_structural_errors():
+    sel = jnp.ones(8, bool)
+    with pytest.raises(ValueError, match="must be bool"):
+        RoundPlan.device(sel, sel, jnp.zeros(8, jnp.int32), 1.0)
+    with pytest.raises(ValueError, match="quorum must be a scalar"):
+        RoundPlan.device(sel, sel, jnp.zeros(8, bool),
+                         jnp.ones(8, jnp.float32))
+    with pytest.raises(ValueError, match="entries, expected"):
+        RoundPlan.device(sel, sel[:4], jnp.zeros(8, bool), 1.0)
+    with pytest.raises(ValueError, match="steps_override"):
+        RoundPlan.device(sel, sel, jnp.zeros(8, bool), 1.0,
+                         steps_override=jnp.ones(8, jnp.float32))
+    with pytest.raises(ValueError, match="agg_weights"):
+        RoundPlan.device(sel, sel, jnp.zeros(8, bool), 1.0,
+                         agg_weights=jnp.ones(4, jnp.float32))
