@@ -365,6 +365,203 @@ def run_pipeline():
     return record
 
 
+COHORT_XS = (128, 512, 1024, None)            # None = full scan
+# 30-round reps amortize the per-rep run boundary (fresh policy state +
+# fleet cache reset, which is O(N) and so asymmetric across fleet sizes)
+# down to noise; shorter reps understate the compact path's steady state
+COHORT_ROUNDS = 4 if QUICK else 30
+# 5 reps: the recording container shares cores, and per-rep throughput
+# swings ~10% with co-tenant load — best-of-5 pins each engine's
+# quiet-machine rate where best-of-3 still carries rep lottery
+COHORT_REPS = 1 if QUICK else 5
+PAIR_EXTRA_REPS = 0 if QUICK else 10
+N_SMOKE = 20_000 if QUICK else 1_000_000
+X_SMOKE = 512
+SMOKE_ROUNDS = 3
+
+
+def _vec_classification(n, *, num_classes=2, dim=4, n_per_client=2,
+                        n_test=256, seed=0):
+    """Vectorized tiny-task synthesis for the million-client smoke —
+    ``federated_classification``'s per-client python loop is O(N) host
+    work that would dwarf the measurement at N=1M."""
+    from repro.data.synthetic import FederatedClassification
+    rng = np.random.RandomState(seed)
+    centers = (rng.randn(num_classes, dim) * 2.2).astype(np.float32)
+    y = rng.randint(0, num_classes, (n, n_per_client))
+    x = centers[y] + rng.randn(n, n_per_client, dim).astype(np.float32)
+    ty = rng.randint(0, num_classes, n_test)
+    tx = centers[ty] + rng.randn(n_test, dim).astype(np.float32)
+    return FederatedClassification(
+        x, y.astype(np.int32), tx, ty.astype(np.int32),
+        y[:, :1].astype(np.int32), num_classes)
+
+
+def run_cohort():
+    """Compact-cohort round path: rounds/sec vs cohort width X at
+    N=4096, plus the N=1M fleet-state smoke.
+
+    The sweep holds the fleet fixed and varies ``FLConfig.cohort_size``
+    (None = the full (N, ...) scan); ``clients_per_round`` is capped at
+    X so every compact point satisfies the static selection bound.  The
+    acceptance reference is a *full-scan* N=512 run: compact N=4096,
+    X=512 vmaps the same 512 trainer rows, so its rate should meet or
+    beat the small fleet's — that is what "round cost tracks the cohort,
+    not the fleet" means.  Reps are interleaved on pre-compiled engines
+    and each point keeps its best rep (machine-load drift cannot
+    masquerade as a speedup).  Merged into BENCH_engine.json under
+    "cohort"."""
+    n = N_MESH
+    sim, fl, data = _setup(n)
+    sim = dataclasses.replace(
+        sim, rounds=WARMUP + COHORT_ROUNDS * COHORT_REPS)
+    sim512, fl512, data512 = _setup(512)
+    sim512 = dataclasses.replace(
+        sim512, rounds=WARMUP + COHORT_ROUNDS * COHORT_REPS)
+
+    engines = {}
+    # quick mode shrinks the fleet below the larger sweep points
+    xs = tuple(x for x in COHORT_XS if x is None or x <= n)
+    for x in xs:
+        cpr = fl.clients_per_round if x is None \
+            else min(x, fl.clients_per_round)
+        # donation is the steady-state config the compact path is built
+        # for: the cohort cache scatter updates the donated (N, D) buffer
+        # in place (undonated, XLA copies the whole fleet cache per
+        # round, which is O(N) work the cohort exists to avoid)
+        fl2 = dataclasses.replace(fl, dynamics="bernoulli",
+                                  cohort_size=x, clients_per_round=cpr,
+                                  donate_buffers=True)
+        engine = FleetEngine(data, sim, fl2, fleet=Fleet(sim))
+        engine.run(POLICY, rounds=WARMUP, diagnostics=False)  # jit warmup
+        engines["full" if x is None else str(x)] = (engine, cpr)
+    ref_fl = dataclasses.replace(fl512, dynamics="bernoulli",
+                                 donate_buffers=True)
+    ref_engine = FleetEngine(data512, sim512, ref_fl, fleet=Fleet(sim512))
+    ref_engine.run(POLICY, rounds=WARMUP, diagnostics=False)
+    engines["full_n512"] = (ref_engine, ref_fl.clients_per_round)
+    # run the acceptance-critical pair (compact X=512 vs the full-scan
+    # N=512 reference — the "round cost tracks the cohort" comparison)
+    # back-to-back within each rep: the slow full-fleet points otherwise
+    # sit between them and transient machine load decorrelates exactly
+    # the two rates being compared
+    order = [k for k in ("128", "512", "full_n512", "1024", "full")
+             if k in engines] + [k for k in engines
+                                 if k not in ("128", "512", "full_n512",
+                                              "1024", "full")]
+
+    reps = {k: [] for k in engines}
+    for _ in range(COHORT_REPS):
+        for k in order:
+            engine, _cpr = engines[k]
+            t0 = time.time()
+            engine.run(POLICY, rounds=COHORT_ROUNDS,
+                       eval_every=10 * COHORT_ROUNDS, diagnostics=False)
+            reps[k].append(COHORT_ROUNDS / (time.time() - t0))
+    # the pair is ~1% of the sweep's wall-clock, so oversample it: the
+    # two rates sit within a few percent of each other and a handful of
+    # paired samples still leaves their median at the mercy of one bad
+    # weather window
+    for _ in range(PAIR_EXTRA_REPS if "512" in engines else 0):
+        for k in ("512", "full_n512"):
+            engine, _cpr = engines[k]
+            t0 = time.time()
+            engine.run(POLICY, rounds=COHORT_ROUNDS,
+                       eval_every=10 * COHORT_ROUNDS, diagnostics=False)
+            reps[k].append(COHORT_ROUNDS / (time.time() - t0))
+    sweep = {}
+    for k, (engine, cpr) in engines.items():
+        best = max(reps[k])
+        sweep[k] = {"n": engine.fl_cfg.num_clients,
+                    "cohort_size": engine.fl_cfg.cohort_size,
+                    "clients_per_round": cpr,
+                    "rounds_per_sec": best,
+                    "reps_rounds_per_sec": reps[k],
+                    "packed_rows":
+                        engine.server_step_memory()["packed_rows"]}
+        emit(f"engine_cohort_{k}", 1e6 / best,
+             f"n={sweep[k]['n']};rps={best:.3f}")
+    del engines, ref_engine
+
+    # ---- N=1M fleet-state smoke: (N,) state is the only N-proportional
+    # memory; the trainer, cut and aggregation all run on (X, ...) blocks
+    smoke_sim = SimConfig(num_clients=N_SMOKE, rounds=WARMUP + SMOKE_ROUNDS,
+                          local_steps=2, batch_size=2, seed=7,
+                          model_hidden=4, model_depth=1)
+    smoke_fl = FLConfig(num_clients=N_SMOKE, clients_per_round=X_SMOKE,
+                        cohort_size=X_SMOKE, dynamics="bernoulli",
+                        donate_buffers=True)
+    smoke_data = _vec_classification(N_SMOKE, seed=8)
+    engine = FleetEngine(smoke_data, smoke_sim, smoke_fl,
+                         fleet=Fleet(smoke_sim))
+    engine.run(POLICY, rounds=WARMUP, diagnostics=False)      # jit warmup
+    t0 = time.time()
+    engine.run(POLICY, rounds=SMOKE_ROUNDS, eval_every=10 * SMOKE_ROUNDS,
+               diagnostics=False)
+    dt = time.time() - t0
+    mem = engine.server_step_memory()
+    live = int(sum(a.nbytes for a in jax.live_arrays()))
+    smoke = {"n": N_SMOKE, "cohort_size": X_SMOKE,
+             "rounds_run": SMOKE_ROUNDS,
+             "rounds_per_sec": SMOKE_ROUNDS / dt,
+             "model_hidden": smoke_sim.model_hidden,
+             "model_depth": smoke_sim.model_depth,
+             "server_step_peak_live_bytes": mem["peak_live_bytes"],
+             "packed_rows": mem["packed_rows"],
+             "packed_buffer_bytes": mem["packed_buffer_bytes"],
+             "live_device_bytes": live}
+    emit("engine_cohort_smoke", dt * 1e6 / SMOKE_ROUNDS,
+         f"n={N_SMOKE};x={X_SMOKE};rps={SMOKE_ROUNDS / dt:.3f};"
+         f"live_bytes={live}")
+
+    path = os.path.join(RESULTS, "BENCH_engine.json")
+    record = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            record = json.load(f)
+    record["cohort"] = {
+        "policy": POLICY, "rounds": COHORT_ROUNDS, "reps": COHORT_REPS,
+        "pair_extra_reps": PAIR_EXTRA_REPS,
+        "dynamics": "bernoulli", "donate_buffers": True,
+        "note": "cohort_size=X gathers the selected cohort into dense "
+                "(X, ...) blocks for train/cut/aggregate and scatters "
+                "back to (N,) fleet state; full_n512 is the full-scan "
+                "acceptance reference (same 512 trainer rows as the "
+                "N=4096, X=512 compact point).  smoke: only the (N,) "
+                "fleet state scales with N (tiny model via "
+                "SimConfig.model_hidden/model_depth, vectorized data)",
+        "sweep": sweep, "smoke": smoke}
+    if "512" in sweep and "full_n512" in sweep:
+        # the controlled acceptance contrast: rep i runs the two engines
+        # back-to-back (see the order comment above), so the per-rep
+        # ratio differences out the co-tenant load swing of that weather
+        # window; the median over reps is the noise-robust "compact
+        # round meets the same-cohort full-scan rate" statistic, where
+        # a ratio of two independently-taken maxima still carries the
+        # per-engine rep lottery (~+-8% swings on the shared container)
+        paired = sorted(a / b for a, b in
+                        zip(reps["512"], reps["full_n512"]))
+        record["cohort"]["pair"] = {
+            "paired_ratios": paired,
+            "x512_over_full_n512_paired_median":
+                paired[len(paired) // 2],
+            "x512_over_full_n512_best_rates":
+                sweep["512"]["rounds_per_sec"]
+                / sweep["full_n512"]["rounds_per_sec"]}
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    if "512" in sweep:
+        pair = record["cohort"]["pair"]
+        emit("engine_cohort_summary", 0.0,
+             f"x512_over_full_n512_paired_median="
+             f"{pair['x512_over_full_n512_paired_median']:.3f}x;"
+             f"best_rates="
+             f"{pair['x512_over_full_n512_best_rates']:.3f}x",
+             record=None)
+    return record
+
+
 DYN_PATHS = (("host_rng", "bernoulli_host"),
              ("device_bernoulli", "bernoulli"),
              ("device_markov", "markov"))
@@ -423,5 +620,7 @@ if __name__ == "__main__":
         run_dynamics()
     elif "--pipeline" in sys.argv[1:]:
         run_pipeline()
+    elif "--cohort" in sys.argv[1:]:
+        run_cohort()
     else:
         run()

@@ -48,6 +48,9 @@ def main() -> None:
         # pipelined device round loop (pipeline_depth 1/2/4)
         "engine_pipeline": types.SimpleNamespace(
             run=bench_engine.run_pipeline),
+        # compact-cohort round path (X sweep + N=1M fleet-state smoke)
+        "engine_cohort": types.SimpleNamespace(
+            run=bench_engine.run_cohort),
     }
     print("name,us_per_call,derived")
     failed = []

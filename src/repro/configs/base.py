@@ -256,6 +256,25 @@ class FLConfig:
     # ^ donate dead round inputs on the jitted trainer / server_round_step
     #   so XLA aliases them into the outputs (steady-state rounds allocate
     #   nothing new); donated host-side handles are invalidated
+    cohort_size: Optional[int] = None
+    # ^ static X: compact selected-cohort round path.  None = full scan
+    #   (trainer/cut/aggregation run over all N clients, masked).  An int
+    #   makes the engine gather the selected clients' data, caches, draw
+    #   and plan arrays into dense (X, ...) blocks on device, run local
+    #   training, the round cut and the packed aggregation over X rows,
+    #   and scatter the results back into the (N,)-sized fleet state —
+    #   round cost tracks the cohort instead of the fleet while fleet
+    #   state stays the only N-proportional memory.  Trajectories are
+    #   bit-identical to the full scan on a single device; under a client
+    #   mesh the integer trajectory (received/selected/wall clock) is
+    #   exact and accuracies agree to float tolerance (cohort rows
+    #   regroup across shards, so the psum reassociates).  Every plan's
+    #   selected count must fit in X (the engine rejects policies whose
+    #   ``selection_bound()`` exceeds it up front, and flags runtime
+    #   overflow — under ``pipeline_depth`` > 1 the overflow check is
+    #   read back with the deferred ledger, i.e. up to depth-1 rounds
+    #   late).  Requires a device dynamics process (not bernoulli_host)
+    #   and, under a mesh, ``cohort_size % mesh_shape[0] == 0``.
     # fleet dynamics (repro.fleet): availability process + scenario params
     dynamics: str = "bernoulli_host"
     # ^ registered process name.  "bernoulli_host" is the seed simulator's
@@ -276,6 +295,28 @@ class FLConfig:
     #   (the round close runs jitted on device; History rows are resolved
     #   from device scalars in arrival order).  ``time_budget`` runs
     #   resolve every round regardless (the budget check needs cum_time).
+
+    def __post_init__(self):
+        x = self.cohort_size
+        if x is None:
+            return
+        if not isinstance(x, int) or isinstance(x, bool) or x < 1:
+            raise ValueError(
+                f"FLConfig.cohort_size must be a positive int or None, "
+                f"got {x!r}")
+        if x > self.num_clients:
+            raise ValueError(
+                f"FLConfig.cohort_size ({x}) exceeds num_clients "
+                f"({self.num_clients}) — a cohort cannot be larger than "
+                f"the fleet; use cohort_size=None for the full scan")
+        shape = self.mesh_shape
+        if shape is not None and len(shape) >= 1 and shape[0] > 1 \
+                and x % shape[0] != 0:
+            raise ValueError(
+                f"FLConfig.cohort_size ({x}) must be divisible by the "
+                f"client mesh size ({shape[0]}) — the gathered (X, ...) "
+                f"cohort block shards over the ('clients',) axis and "
+                f"shard_map needs an even split")
 
 
 @dataclass(frozen=True)

@@ -82,6 +82,16 @@ class PackLayout:
     offsets: Tuple[int, ...]
     dim: int                     # D — total packed element count
 
+    def buffer_bytes(self, rows: int) -> int:
+        """Bytes of the packed fp32 (rows, D) aggregation buffer.
+
+        ``rows`` is the client axis of the *stacked inputs actually
+        aggregated*: N on the full-scan path, the static cohort size X on
+        the compact path — the compact engine reports (X, D) here, which
+        is the buffer that really lives on device (see
+        ``FleetEngine.server_step_memory``)."""
+        return int(rows) * self.dim * 4
+
 
 def _prod(shape) -> int:
     out = 1
@@ -124,7 +134,12 @@ def pack(params: Any, layout: PackLayout) -> jax.Array:
 
 
 def pack_stacked(client_params: Any, layout: PackLayout) -> jax.Array:
-    """Stacked pytree (leaves (C, ...)) -> (C, D) fp32 buffer."""
+    """Stacked pytree (leaves (C, ...)) -> (C, D) fp32 buffer.
+
+    The client axis C is whatever the caller stacked: the full fleet N,
+    or — on the compact-cohort round path — the static cohort size X
+    (the layout describes the packed D axis only, so one layout serves
+    both row counts)."""
     leaves = _check_layout(client_params, layout, lead=1)
     C = leaves[0].shape[0]
     return jnp.concatenate(

@@ -21,7 +21,7 @@ what lets the loop pipeline rounds (``FLConfig.pipeline_depth``).
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -124,7 +124,8 @@ def make_server_round_step(template_params, *, local_steps: int,
                            staleness_discount: float = 1.0,
                            uses_cache: bool = True,
                            block_c: int = 8, block_d: int = 2048,
-                           mesh=None, donate: bool = False):
+                           mesh=None, donate: bool = False,
+                           cohort_size: Optional[int] = None):
     """Build the fused per-round server step (one jit, zero host syncs).
 
     The returned callable runs everything the server does between "uploads
@@ -148,9 +149,82 @@ def make_server_round_step(template_params, *, local_steps: int,
     caches, so donating them could never alias and would only raise
     jax's unusable-donation warning.  Donated host handles (the caller's
     previous global/caches references) are invalidated by the call.
+
+    ``cohort_size``: static X switches to the compact-cohort variant: the
+    stacked trainer outputs arrive as dense (X, ...) blocks plus the (X,)
+    cohort index, aggregation packs and reduces an (X, D) buffer instead
+    of (N, D), and the C3 cache bookkeeping scatters back into the (N,)
+    fleet state (predicated ``.at[].set(mode="drop")`` writes — sentinel
+    and masked-off rows touch nothing).  Weighted aggregation over the
+    gathered rows is the same sequential fp32 reduction over the same
+    nonzero-weight terms, so a single-device compact round is
+    bit-identical to the full scan; under a client mesh cohort members
+    regroup across shards and the psum reassociates (integer trajectory
+    exact, accuracies to float tolerance — same contract as the sharded
+    full scan vs single device).
     """
     layout = AGG.pack_layout(template_params)
     donate_argnums = (0, 1) if donate else ()
+
+    if cohort_size is not None:
+        @functools.partial(jax.jit, donate_argnums=donate_argnums)
+        def server_round_step_cohort(global_params,
+                                     caches: C.ClientCaches,
+                                     final_params, cache_params,
+                                     cached_steps, idx, selected, fail,
+                                     received, resume, n_samples,
+                                     extra_weights, rnd):
+            """-> (new_global_params, new_caches).
+
+            final_params / cache_params / cached_steps and the
+            ``fail``/``received`` masks are (X,)-leading cohort blocks
+            (trainer / round-cut outputs); ``idx`` is the (X,) cohort
+            index (sentinel-padded).  ``selected``/``resume`` arrive as
+            the (N,) plan masks the engine holds and are gathered here;
+            caches / n_samples / extra_weights stay (N,)-sized — the
+            only fleet-proportional state the step touches.
+            """
+            from repro.sharding import partitioning as SP
+
+            rnd = jnp.asarray(rnd, jnp.int32)
+
+            def take(a, fill):
+                return jnp.take(a, idx, axis=0, mode="fill",
+                                fill_value=fill)
+
+            selected = take(selected, False)              # (X,)
+            resume = take(resume, False)
+            stamp = take(caches.round_stamp, -1)          # (X,)
+            base_stale = jnp.where(resume & (stamp >= 0),
+                                   jnp.maximum(rnd - stamp, 0),
+                                   0).astype(jnp.float32)
+            w = AGG.aggregation_weights(
+                received, n_samples=take(n_samples, 0.0),
+                staleness=base_stale,
+                staleness_discount=staleness_discount) \
+                * take(extra_weights, 0.0)
+            w = SP.cohort_constraint(w, mesh, cohort_size)
+            new_global = AGG.fed_aggregate_packed(
+                global_params, final_params, w, layout, impl=agg_impl,
+                block_c=block_c, block_d=block_d, mesh=mesh)
+            if uses_cache:
+                prior_steps = jnp.round(
+                    take(caches.progress, 0.0) * local_steps
+                ).astype(jnp.int32)
+                total_cached = jnp.where(resume, prior_steps, 0) \
+                    + cached_steps
+                write = selected & fail & (total_cached > 0)
+                base_round = jnp.where(resume & (stamp >= 0), stamp, rnd)
+                caches = C.scatter_write_cache(
+                    caches, idx, write, cache_params,
+                    (total_cached / max(local_steps, 1)
+                     ).astype(jnp.float32), base_round)
+                caches = C.scatter_clear_cache(caches, idx, received)
+                caches = SP.cohort_scatter_constraint(
+                    caches, mesh, caches.progress.shape[0])
+            return new_global, caches
+
+        return server_round_step_cohort
 
     @functools.partial(jax.jit, donate_argnums=donate_argnums)
     def server_round_step(global_params, caches: C.ClientCaches,
@@ -218,7 +292,8 @@ def host_round_cut(times, quorum, round_deadline: float,
 
 
 def make_round_cut(num_clients: int, round_deadline: float,
-                   waits_for_stragglers: bool, mesh=None):
+                   waits_for_stragglers: bool, mesh=None,
+                   scatter_num_clients: Optional[int] = None):
     """Build the jitted device-resident round cut (lines 13–16).
 
     Semantically identical to :func:`host_round_cut` — and bit-identical
@@ -247,6 +322,16 @@ def make_round_cut(num_clients: int, round_deadline: float,
     ``waits_for_stragglers`` is a static policy trait: the async variant
     compiles the extra close-at-last-arrival branch in, the sync variant
     compiles it out.
+
+    ``scatter_num_clients``: compact-cohort variant.  ``num_clients`` is
+    then the static cohort size X — ``times``/``success`` arrive as (X,)
+    gathered blocks — and the returned callable additionally takes the
+    (X,) cohort index ``idx`` and returns ``(t_cut, received,
+    received_full, capped)`` where ``received_full`` is the (N,) receive
+    mask scattered back onto the fleet (sentinel rows dropped).  The cut
+    itself is exact: every finite finish time belongs to a selected
+    client, selected ⊆ cohort, so the order statistics over the X rows
+    equal those over the full N — bit-identical even under a mesh.
     """
     deadline = float(round_deadline)
     # nearest float32 (what the old received_fn's weak f64->f32 cast did)
@@ -256,8 +341,7 @@ def make_round_cut(num_clients: int, round_deadline: float,
     if float(d_flag) > deadline:
         d_flag = np.nextafter(d_flag, np.float32(-np.inf))
 
-    @jax.jit
-    def round_cut(times, quorum, success):
+    def cut_core(times, quorum, success):
         q = jnp.ceil(jnp.asarray(quorum, jnp.float32)).astype(jnp.int32)
         order = jnp.sort(times)                   # inf sorts to the end
         finite_count = jnp.isfinite(times).sum()
@@ -272,6 +356,29 @@ def make_round_cut(num_clients: int, round_deadline: float,
         capped = t_raw > d_flag
         t_cut = jnp.where(capped, d_cmp, t_raw)
         received = success & (times <= t_cut)
+        return t_cut, received, capped
+
+    if scatter_num_clients is not None:
+        @jax.jit
+        def round_cut_cohort(times, quorum, success, idx):
+            from repro.sharding import partitioning as SP
+            t_cut, received, capped = cut_core(times, quorum, success)
+            received_full = jnp.zeros((scatter_num_clients,), bool) \
+                .at[idx].set(received, mode="drop")
+            if mesh is not None:
+                received = SP.cohort_constraint(received, mesh,
+                                                num_clients)
+                received_full = SP.cohort_scatter_constraint(
+                    received_full, mesh, scatter_num_clients)
+                t_cut, capped = SP.replicated_constraint(
+                    (t_cut, capped), mesh)
+            return t_cut, received, received_full, capped
+
+        return round_cut_cohort
+
+    @jax.jit
+    def round_cut(times, quorum, success):
+        t_cut, received, capped = cut_core(times, quorum, success)
         if mesh is not None:
             from repro.sharding import partitioning as SP
             received = SP.fleet_constraint(received, mesh, num_clients)

@@ -31,6 +31,7 @@ import dataclasses
 from typing import Any, Dict, Optional, Tuple, Type
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig
@@ -38,6 +39,31 @@ from repro.core.caching import ClientCaches
 from repro.fl.simulator import Fleet, SimConfig
 
 _BOOL_FIELDS = ("selected", "distribute", "resume")
+
+
+def cohort_index(selected, cohort_size: int) -> jax.Array:
+    """Device cohort index of a selection mask: the ascending client ids
+    of the selected set, padded to the static ``cohort_size`` with the
+    out-of-range sentinel N (= ``selected.shape[0]``).
+
+    Traceable (fixed output shape), so the engine derives it *inside* the
+    jitted round body — no host sync.  Sentinel entries make every
+    ``mode="fill"`` gather read a benign default and every
+    ``mode="drop"`` scatter skip the row, which is what keeps the compact
+    (X, ...) round path bit-identical to the full scan.  When more than
+    ``cohort_size`` clients are selected the index silently truncates to
+    the lowest ids — pair with :func:`cohort_overflow` (the engine defers
+    the flag through its round ledger and raises at readback).
+    """
+    sel = jnp.asarray(selected)
+    return jnp.flatnonzero(sel, size=cohort_size,
+                           fill_value=sel.shape[0])
+
+
+def cohort_overflow(selected, cohort_size: int) -> jax.Array:
+    """Device bool scalar: did the plan select more clients than the
+    static cohort can hold (i.e. did :func:`cohort_index` truncate)?"""
+    return jnp.asarray(selected).sum() > cohort_size
 
 
 # ---------------------------------------------------------------------------
@@ -201,6 +227,12 @@ class RoundPlan:
                     "RoundPlan.agg_weights must be finite and >= 0")
         return self
 
+    def cohort_index(self, cohort_size: int) -> jax.Array:
+        """This plan's device cohort-index view (see module-level
+        :func:`cohort_index`): ascending selected client ids padded with
+        the sentinel N to the static ``cohort_size``."""
+        return cohort_index(self.selected, cohort_size)
+
 
 @dataclasses.dataclass(frozen=True)
 class RoundReport:
@@ -279,6 +311,11 @@ class Policy:
     name = "base"
     uses_cache = False            # wants the C3 client cache machinery
     waits_for_stragglers = True   # sync designs idle-wait to the deadline
+    selects_at_most_clients_per_round = False
+    # ^ static trait: every plan's selected count is bounded by
+    #   FLConfig.clients_per_round (flude/random/oort/safa/fedsea).
+    #   Select-all designs (mifa, asyncfeded) leave it False — their
+    #   bound is the fleet size.
 
     def __init__(self, sim_cfg: SimConfig, fl_cfg: FLConfig,
                  fleet: Optional[Fleet] = None, mesh: Any = None):
@@ -291,6 +328,17 @@ class Policy:
 
     def init_state(self) -> Any:
         return None
+
+    def selection_bound(self) -> int:
+        """Static upper bound on any plan's selected count — what the
+        engine checks ``FLConfig.cohort_size`` against up front (a cohort
+        smaller than a plan's selection would silently truncate
+        training).  Derived from ``selects_at_most_clients_per_round``;
+        override for policies with a different static bound."""
+        n = self.fl_cfg.num_clients
+        if self.selects_at_most_clients_per_round:
+            return min(self.fl_cfg.clients_per_round, n)
+        return n
 
     def plan(self, state: Any, obs: RoundObservation,
              rng) -> Tuple[Any, RoundPlan]:

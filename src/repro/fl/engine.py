@@ -42,7 +42,7 @@ from repro.configs.base import FLConfig
 from repro.data.synthetic import FederatedClassification
 from repro.fl import classifier as CLF
 from repro.fl.api import (Policy, RoundObservation, RoundPlan, RoundReport,
-                          make_policy)
+                          cohort_index, cohort_overflow, make_policy)
 from repro.fl import policies as _builtin_policies  # noqa: F401  (registers)
 from repro.fl.simulator import Fleet, SimConfig, place_per_client
 from repro.fleet import get_dynamics, make_dynamics  # registers processes
@@ -57,7 +57,8 @@ BIG = 1 << 20
 # ---------------------------------------------------------------------------
 
 def make_trainer(sim_cfg: SimConfig, data: FederatedClassification,
-                 mesh=None, donate: bool = False, dynamics_features=None):
+                 mesh=None, donate: bool = False, dynamics_features=None,
+                 cohort_size: Optional[int] = None):
     """Build the jitted all-fleet local trainer.
 
     ``mesh``: optional ``("clients",)`` fleet mesh — the per-client
@@ -79,6 +80,18 @@ def make_trainer(sim_cfg: SimConfig, data: FederatedClassification,
     host and nothing (N,)-sized is uploaded per round.  No argument is
     donated on this variant (the draw is also exposed to policies via
     ``RoundObservation`` and must stay live).
+
+    ``cohort_size``: static X (dynamics variant only) switches to the
+    compact-cohort round body: the cohort index is derived on device
+    from the plan's selection mask, the clients' data / caches / draw /
+    plan arrays are gathered into dense (X, ...) blocks, and the
+    vmap+scan runs over X rows instead of N — round FLOPs track the
+    cohort, not the fleet.  Returns the (X,) blocks the compact cut and
+    server step consume, plus scattered (N,) report views (losses /
+    fail / finish times) for policies, the cohort index, and a device
+    overflow flag (``|selected| > X`` — the engine defers it through
+    the round ledger).  Everything happens inside the one jitted
+    dispatch: compaction adds no per-round host transfer.
     """
     x_all = jnp.asarray(data.x)            # (N, n, d)
     y_all = jnp.asarray(data.y)            # (N, n)
@@ -93,17 +106,24 @@ def make_trainer(sim_cfg: SimConfig, data: FederatedClassification,
 
     grad_fn = jax.vmap(jax.value_and_grad(CLF.clf_loss))
     donate_argnums = (3,) if donate and dynamics_features is None else ()
+    if cohort_size is not None and dynamics_features is None:
+        raise ValueError("cohort_size requires the dynamics trainer "
+                         "variant (pass dynamics_features)")
 
-    def local_scan(start_params, steps_needed, stop_step, cache_every):
-        """The shared masked local-training scan body."""
+    def local_scan(x_arr, y_arr, start_params, steps_needed, stop_step,
+                   cache_every):
+        """The shared masked local-training scan body.  ``x_arr``/
+        ``y_arr`` carry the client axis — the full (N, n, d) fleet or a
+        gathered (X, n, d) cohort block; the per-client math is
+        elementwise over that axis either way."""
         zero_cache = start_params
-        loss0 = jnp.zeros((x_all.shape[0],), jnp.float32)
+        loss0 = jnp.zeros((x_arr.shape[0],), jnp.float32)
 
         def step_fn(carry, j):
             params, cache, cached_steps, loss_sum = carry
             idx = (j * b + jnp.arange(b)) % n
-            xb = x_all[:, idx]
-            yb = y_all[:, idx]
+            xb = x_arr[:, idx]
+            yb = y_arr[:, idx]
             loss, grads = grad_fn(params, xb, yb)
             active = (j < steps_needed) & (j < stop_step)
 
@@ -125,7 +145,7 @@ def make_trainer(sim_cfg: SimConfig, data: FederatedClassification,
             return (params, cache, cached_steps, loss_sum), None
 
         init = (start_params, zero_cache,
-                jnp.zeros((x_all.shape[0],), jnp.int32), loss0)
+                jnp.zeros((x_arr.shape[0],), jnp.int32), loss0)
         (params, cache, cached_steps, loss_sum), _ = jax.lax.scan(
             step_fn, init, jnp.arange(max_steps))
         # normalize by the steps that actually *ran*: the scan is
@@ -153,26 +173,20 @@ def make_trainer(sim_cfg: SimConfig, data: FederatedClassification,
             Returns (final_params, cache_params, cached_steps, mean_loss).
             """
             start_params = core.resume_params(caches, global_params, resume)
-            return local_scan(start_params, steps_needed, stop_step,
-                              cache_every)
+            return local_scan(x_all, y_all, start_params, steps_needed,
+                              stop_step, cache_every)
 
         return train_all
 
     feats = dynamics_features
     model_mb = sim_cfg.model_mb
 
-    @jax.jit
-    def train_all_dyn(global_params, caches, draw, selected, distribute,
-                      resume, base_steps, cache_every):
-        """Dynamics round body: workload + failures + training + timing.
-
-        draw:       repro.fleet.FleetDraw for this round (device arrays).
-        selected/distribute/resume: (N,) bool plan masks.
-        base_steps: (N,) int planned steps before resume credit.
-        Returns (final_params, cache_params, cached_steps, mean_loss,
-        steps_needed, fail, success, times) — times in simulated seconds,
-        inf where the device never uploads.
-        """
+    def round_body(x_arr, y_arr, steps_per_sec, global_params, caches,
+                   draw, selected, distribute, resume, base_steps,
+                   cache_every):
+        """Workload + failures + training + timing over one client axis
+        (the full fleet, or a gathered cohort block — every input is
+        aligned along dim 0)."""
         # clamp to the scan length: an oversized steps_override would
         # otherwise charge un-run steps in the timing model below
         base_steps = jnp.minimum(base_steps, max_steps)
@@ -186,24 +200,118 @@ def make_trainer(sim_cfg: SimConfig, data: FederatedClassification,
         stop = jnp.where(fail, draw.interruption_step(steps_needed), BIG)
         start_params = core.resume_params(caches, global_params, resume)
         params, cache, cached_steps, mean_loss = local_scan(
-            start_params, steps_needed, stop, cache_every)
+            x_arr, y_arr, start_params, steps_needed, stop, cache_every)
         # timing model (Algorithm 2 lines 13–16) on the round's bandwidth
         success = selected & ~fail & (steps_needed > 0)
         completed = jnp.minimum(steps_needed, stop)
         comm = model_mb * 8.0 / draw.bandwidth
         t = jnp.where(distribute, comm, 0.0) \
-            + completed / feats.steps_per_sec \
+            + completed / steps_per_sec \
             + jnp.where(success, comm, 0.0)
         times = jnp.where(success, t, jnp.inf)
         return (params, cache, cached_steps, mean_loss, steps_needed, fail,
                 success, times)
 
-    return train_all_dyn
+    if cohort_size is None:
+        @jax.jit
+        def train_all_dyn(global_params, caches, draw, selected,
+                          distribute, resume, base_steps, cache_every):
+            """Dynamics round body: workload + failures + training +
+            timing.
+
+            draw:       repro.fleet.FleetDraw for this round (device
+                        arrays).
+            selected/distribute/resume: (N,) bool plan masks.
+            base_steps: (N,) int planned steps before resume credit.
+            Returns (final_params, cache_params, cached_steps, mean_loss,
+            steps_needed, fail, success, times) — times in simulated
+            seconds, inf where the device never uploads.
+            """
+            return round_body(x_all, y_all, feats.steps_per_sec,
+                              global_params, caches, draw, selected,
+                              distribute, resume, base_steps, cache_every)
+
+        return train_all_dyn
+
+    X = int(cohort_size)
+    N = x_all.shape[0]
+
+    @jax.jit
+    def train_cohort_dyn(global_params, caches, draw, selected,
+                         distribute, resume, base_steps, cache_every):
+        """Compact-cohort dynamics round body (see the factory
+        docstring): gather → (X, ...) round body → scatter, one dispatch.
+
+        Inputs are the same (N,)-sized round arrays as the full-scan
+        variant; the cohort index is derived *inside* the jit.  Returns
+        ``(final_params_x, cache_params_x, cached_steps_x, mean_loss_x,
+        steps_needed_x, fail_x, success_x, times_x, idx, overflow,
+        losses_n, fail_n, times_n)`` — the ``_x`` blocks are (X,)-leading
+        cohort arrays; ``losses_n``/``fail_n``/``times_n`` are the (N,)
+        report views policies consume (idle clients read the same
+        zero-loss / no-fail / inf-time values the full scan computes for
+        them).
+        """
+        idx = cohort_index(selected, X)
+        idx = SP.cohort_constraint(idx, mesh, X)
+        overflow = cohort_overflow(selected, X)
+
+        def take(a, fill):
+            return jnp.take(a, idx, axis=0, mode="fill", fill_value=fill)
+
+        sel_x = take(selected, False)
+        dist_x = take(distribute, False)
+        res_x = take(resume, False)
+        base_x = take(base_steps, 0)
+        ce_x = take(cache_every, 1)
+        sps_x = take(feats.steps_per_sec, 1.0)
+        draw_x = draw.take(idx)
+        caches_x = core.gather_caches(caches, idx)
+        x_x = jnp.take(x_all, idx, axis=0, mode="fill", fill_value=0)
+        y_x = jnp.take(y_all, idx, axis=0, mode="fill", fill_value=0)
+        (x_x, y_x, caches_x, draw_x, sel_x, dist_x, res_x, base_x, ce_x,
+         sps_x) = SP.cohort_constraint(
+            (x_x, y_x, caches_x, draw_x, sel_x, dist_x, res_x, base_x,
+             ce_x, sps_x), mesh, X)
+
+        (params, cache, cached_steps, mean_loss, steps_needed, fail,
+         success, times) = round_body(
+            x_x, y_x, sps_x, global_params, caches_x, draw_x, sel_x,
+            dist_x, res_x, base_x, ce_x)
+
+        # (N,) report views: scatter the cohort rows, fill the rest with
+        # exactly what the full scan computes for idle clients (loss 0,
+        # no failure, inf finish time); sentinel rows drop
+        losses_n = jnp.zeros((N,), mean_loss.dtype) \
+            .at[idx].set(mean_loss, mode="drop")
+        fail_n = jnp.zeros((N,), bool).at[idx].set(fail, mode="drop")
+        times_n = jnp.full((N,), jnp.inf, times.dtype) \
+            .at[idx].set(times, mode="drop")
+        losses_n, fail_n, times_n = SP.cohort_scatter_constraint(
+            (losses_n, fail_n, times_n), mesh, N)
+        overflow, = SP.replicated_constraint((overflow,), mesh)
+        return (params, cache, cached_steps, mean_loss, steps_needed,
+                fail, success, times, idx, overflow, losses_n, fail_n,
+                times_n)
+
+    return train_cohort_dyn
 
 
 # ---------------------------------------------------------------------------
 # Round history
 # ---------------------------------------------------------------------------
+
+@jax.jit
+def _ledger_counts(received, online, distribute, selected):
+    """The three (N,) ledger reductions of a round in one dispatch.
+
+    ``(distribute & online)`` is ``FleetDraw.download_mask`` inlined —
+    eager, these are ~5 op-by-op dispatches over fleet-sized arrays every
+    round, which shows up at large N (the device math itself is trivial).
+    Returns device scalars; the ledger resolves them later, so the
+    pipelined loop still never blocks here."""
+    return (received.sum(), (distribute & online).sum(), selected.sum())
+
 
 @dataclasses.dataclass
 class History:
@@ -259,30 +367,47 @@ class _RoundLedger:
     """
 
     def __init__(self, hist: History, model_mb: float,
-                 round_deadline: float, progress: Optional[Callable]):
+                 round_deadline: float, progress: Optional[Callable],
+                 cohort_info: Optional[tuple] = None):
         self.hist = hist
         self.model_mb = model_mb
         self.round_deadline = round_deadline
         self.progress = progress
+        self.cohort_info = cohort_info    # (policy_name, cohort_size)
         self.pending: List[tuple] = []
         self.cum_comm = 0.0
         self.cum_time = 0.0
         self.acc = float("nan")
 
     def push(self, rnd, evaluated, duration, capped, received, downloads,
-             selected, acc):
-        """Queue one round's device-scalar bookkeeping handles."""
+             selected, acc, overflow=None):
+        """Queue one round's device-scalar bookkeeping handles.
+
+        ``overflow`` (compact-cohort rounds) is the device flag for
+        ``|selected| > cohort_size``: like every other handle it is read
+        back at resolve time, so under ``pipeline_depth`` > 1 a cohort
+        overflow surfaces up to depth-1 rounds after it happened — the
+        documented cost of keeping the check off the per-round hot path.
+        """
         self.pending.append((rnd, evaluated, duration, capped, received,
-                             downloads, selected, acc))
+                             downloads, selected, acc, overflow))
 
     def resolve(self, keep: int = 0):
         """Read back (host-sync) all but the newest ``keep`` rounds."""
         while len(self.pending) > keep:
             (rnd, evaluated, duration, capped, received, downloads,
-             selected, acc_dev) = self.pending.pop(0)
-            duration, capped, received, downloads, selected = \
+             selected, acc_dev, overflow) = self.pending.pop(0)
+            duration, capped, received, downloads, selected, overflow = \
                 jax.device_get((duration, capped, received, downloads,
-                                selected))
+                                selected, overflow))
+            if overflow is not None and bool(overflow):
+                name, x = self.cohort_info or ("<unknown>", "?")
+                raise RuntimeError(
+                    f"cohort overflow in round {rnd}: policy {name!r} "
+                    f"selected {int(selected)} clients but "
+                    f"FLConfig.cohort_size={x} — the compact round "
+                    f"trained a truncated cohort.  Raise cohort_size "
+                    f"(or set it to None for the full scan).")
             self.cum_comm += (int(downloads) + int(received)) \
                 * self.model_mb
             self.cum_time += self.round_deadline if bool(capped) \
@@ -333,12 +458,24 @@ class FleetEngine:
         if self.pipeline_depth < 1:
             raise ValueError(f"FLConfig.pipeline_depth must be >= 1, got "
                              f"{fl_cfg.pipeline_depth}")
+        self.cohort = fl_cfg.cohort_size
+        if self.cohort is not None \
+                and get_dynamics(fl_cfg.dynamics).host_side:
+            raise ValueError(
+                f"FLConfig.cohort_size requires a device dynamics "
+                f"process, but {fl_cfg.dynamics!r} is host-side — the "
+                f"legacy numpy round loop has no compact path (pick a "
+                f"device process, e.g. 'bernoulli', or set "
+                f"cohort_size=None)")
         self._trainer = None      # legacy trainer, built on first host run
         self._acc_fn = jax.jit(CLF.clf_accuracy)
         self._server_steps = {}
+        self._last_caches = None  # previous run's fleet caches (recycled)
+        self._cache_reset = None  # donated in-place zero-fill, built lazily
         template = CLF.init_classifier(
             jax.random.key(sim_cfg.seed + 1), dim=data.x.shape[-1],
-            num_classes=data.num_classes)
+            num_classes=data.num_classes, hidden=sim_cfg.model_hidden,
+            depth=sim_cfg.model_depth)
         # place everything the rounds touch once, at construction: the
         # global model + test set replicated, per-client arrays sharded
         if self.mesh is not None:
@@ -401,12 +538,35 @@ class FleetEngine:
         """Place one (N,) per-client array (sharded under the mesh)."""
         return place_per_client(arr, self.mesh)
 
+    def _fresh_caches(self, template):
+        """Empty (N, ...) C3 cache state for a new run.
+
+        With ``donate_buffers``, the previous run's final caches (stashed
+        on ``_last_caches``) are recycled: a donated jitted reset memsets
+        zeros/-1 into the existing fleet buffers in place, so back-to-back
+        runs skip re-faulting the O(N·D) cache pytree — at N=4096 the
+        fresh allocation costs ~7x the in-place reset.  Sharding carries
+        through (``zeros_like`` keeps the donated leaves' placement)."""
+        N = self.fl_cfg.num_clients
+        spent, self._last_caches = self._last_caches, None
+        if self.donate and spent is not None:
+            if self._cache_reset is None:
+                self._cache_reset = jax.jit(core.reset_caches,
+                                            donate_argnums=0)
+            return self._cache_reset(spent)
+        caches = core.init_caches(template, N)
+        if self.mesh is not None:
+            caches = SP.place_fleet(caches, self.mesh, N)
+        return caches
+
     def _server_step(self, uses_cache: bool):
-        # keyed on mesh shape + donation so ``run(policy)`` reuse stays
-        # valid if the engine's placement knobs ever diverge per run
+        # keyed on mesh shape + donation + cohort so ``run(policy)``
+        # reuse stays valid if the engine's placement knobs ever diverge
+        # per run (the cohort key is what memoizes the compact (X, D)
+        # step separately from the full-scan one)
         mesh_key = None if self.mesh is None else \
             tuple(self.mesh.devices.shape)
-        key = (bool(uses_cache), mesh_key, self.donate)
+        key = (bool(uses_cache), mesh_key, self.donate, self.cohort)
         if key not in self._server_steps:
             self._server_steps[key] = core.make_server_round_step(
                 self._template, local_steps=self.sim_cfg.local_steps,
@@ -415,7 +575,7 @@ class FleetEngine:
                 uses_cache=bool(uses_cache),
                 block_c=self.fl_cfg.agg_block_c,
                 block_d=self.fl_cfg.agg_block_d, mesh=self.mesh,
-                donate=self.donate)
+                donate=self.donate, cohort_size=self.cohort)
         return self._server_steps[key]
 
     def server_step_memory(self, uses_cache: bool = True) -> dict:
@@ -427,22 +587,37 @@ class FleetEngine:
         the steady-state peak — arguments + outputs + temps − aliased —
         drops by exactly the persistent fleet state the step no longer
         double-buffers.
+
+        The profile describes the *active* step: with
+        ``FLConfig.cohort_size`` set, the stacked trainer outputs and the
+        packed aggregation buffer are (X, ...) cohort blocks, not (N, ...)
+        — ``packed_rows``/``packed_buffer_bytes`` report which buffer
+        actually lives on device.
         """
         N = self.fl_cfg.num_clients
+        rows = N if self.cohort is None else int(self.cohort)
         step = self._server_step(uses_cache)
         caches = core.init_caches(self._template, N)
         stacked = jax.tree.map(
-            lambda a: jnp.zeros((N,) + a.shape, a.dtype), self._template)
+            lambda a: jnp.zeros((rows,) + a.shape, a.dtype),
+            self._template)
         if self.mesh is not None:
             caches = SP.place_fleet(caches, self.mesh, N)
-            stacked = SP.place_fleet(stacked, self.mesh, N)
-        mask = self._put1(np.zeros(N, bool))
-        steps_i = self._put1(np.zeros(N, np.int32))
+            stacked = SP.place_fleet(stacked, self.mesh, rows)
+        mask = self._put1(np.zeros(rows, bool))
+        steps_i = self._put1(np.zeros(rows, np.int32))
         ones = self._put1(np.ones(N, np.float32))
         # lower() only traces — nothing executes, nothing is donated
-        lowered = step.lower(self._template, caches, stacked, stacked,
-                             steps_i, mask, mask, mask, mask,
-                             self._n_samples, ones, 0)
+        if self.cohort is None:
+            lowered = step.lower(self._template, caches, stacked, stacked,
+                                 steps_i, mask, mask, mask, mask,
+                                 self._n_samples, ones, 0)
+        else:
+            idx = self._put1(np.arange(rows, dtype=np.int32))
+            mask_n = self._put1(np.zeros(N, bool))
+            lowered = step.lower(self._template, caches, stacked, stacked,
+                                 steps_i, idx, mask_n, mask, mask, mask_n,
+                                 self._n_samples, ones, 0)
         ma = lowered.compile().memory_analysis()
         out = {"argument_bytes": int(ma.argument_size_in_bytes),
                "output_bytes": int(ma.output_size_in_bytes),
@@ -452,6 +627,9 @@ class FleetEngine:
                                   + out["output_bytes"]
                                   + out["temp_bytes"]
                                   - out["alias_bytes"])
+        layout = core.pack_layout(self._template)
+        out["packed_rows"] = rows
+        out["packed_buffer_bytes"] = layout.buffer_bytes(rows)
         return out
 
     def run(self, policy: Union[str, Policy], rounds: Optional[int] = None,
@@ -481,6 +659,16 @@ class FleetEngine:
         if isinstance(policy, str):
             policy = make_policy(policy, sim_cfg, fl_cfg, fleet,
                                  mesh=self.mesh)
+        if self.cohort is not None:
+            bound = policy.selection_bound()
+            if bound > self.cohort:
+                raise ValueError(
+                    f"policy {policy.name!r} can select up to {bound} "
+                    f"clients per round but FLConfig.cohort_size="
+                    f"{self.cohort} — the compact round path would "
+                    f"truncate its cohort.  Raise cohort_size to at "
+                    f"least {bound} (or set it to None for the full "
+                    f"scan).")
         state = policy.init_state()
         n_rounds = sim_cfg.rounds if rounds is None else rounds
 
@@ -490,9 +678,7 @@ class FleetEngine:
             # the first round's server step donates its global-model input;
             # the template must survive for subsequent run() calls
             global_params = jax.tree.map(jnp.copy, global_params)
-        caches = core.init_caches(global_params, fl_cfg.num_clients)
-        if self.mesh is not None:
-            caches = SP.place_fleet(caches, self.mesh, fl_cfg.num_clients)
+        caches = self._fresh_caches(global_params)
 
         hist = History()
         rounds_loop = self._host_rounds \
@@ -544,12 +730,22 @@ class FleetEngine:
     def _round_cut(self, waits_for_stragglers: bool):
         """Memoized jitted device round cut (one variant per the policy's
         straggler trait) — ``(times, quorum, success) -> (t_cut, duration,
-        received)``, everything device-resident."""
-        key = bool(waits_for_stragglers)
+        received)``, everything device-resident.  With a cohort the cut
+        runs over the (X,) gathered finish times and additionally
+        scatters the (N,) receive mask (every finite time belongs to a
+        cohort member, so the order statistics — and the cut — are
+        exact)."""
+        key = (bool(waits_for_stragglers), self.cohort)
         if key not in self._cut_fns:
-            self._cut_fns[key] = core.make_round_cut(
-                self.fl_cfg.num_clients, self.sim_cfg.round_deadline,
-                key, mesh=self.mesh)
+            if self.cohort is None:
+                self._cut_fns[key] = core.make_round_cut(
+                    self.fl_cfg.num_clients, self.sim_cfg.round_deadline,
+                    key[0], mesh=self.mesh)
+            else:
+                self._cut_fns[key] = core.make_round_cut(
+                    self.cohort, self.sim_cfg.round_deadline, key[0],
+                    mesh=self.mesh,
+                    scatter_num_clients=self.fl_cfg.num_clients)
         return self._cut_fns[key]
 
     def _validate_plan(self, plan):
@@ -705,7 +901,8 @@ class FleetEngine:
         sharded over the client mesh no matter what the process body
         produced.  (The round cut is memoized separately per straggler
         trait — see ``_round_cut``.)"""
-        key = (self.fl_cfg.dynamics, self.fl_cfg.dynamics_params)
+        key = (self.fl_cfg.dynamics, self.fl_cfg.dynamics_params,
+               self.cohort)
         if key not in self._dyn_cache:
             N = self.fl_cfg.num_clients
             mesh = self.mesh
@@ -722,7 +919,8 @@ class FleetEngine:
             init_fn = jax.jit(lambda k: SP.fleet_constraint(
                 process.init_state(k), mesh, N))
             trainer = make_trainer(self.sim_cfg, self.data, mesh=mesh,
-                                   dynamics_features=feats)
+                                   dynamics_features=feats,
+                                   cohort_size=self.cohort)
             self._dyn_cache[key] = (process, init_fn, jax.jit(step),
                                     trainer)
         return self._dyn_cache[key]
@@ -776,8 +974,11 @@ class FleetEngine:
             fleet, policy.uses_cache)
         server_step = self._server_step(policy.uses_cache)
         cut_fn = self._round_cut(policy.waits_for_stragglers)
+        cohort_info = None if self.cohort is None \
+            else (policy.name, self.cohort)
         ledger = _RoundLedger(hist, sim_cfg.model_mb,
-                              sim_cfg.round_deadline, progress)
+                              sim_cfg.round_deadline, progress,
+                              cohort_info=cohort_info)
 
         # independent dynamics key stream, reproducible per run
         dyn_base = jax.random.fold_in(jax.random.key(sim_cfg.seed),
@@ -805,35 +1006,60 @@ class FleetEngine:
             base_steps = full_steps if plan.steps_override is None else \
                 self._from_plan(plan.steps_override, np.int32)
 
-            # fused round body: workload + failure/interruption +
-            # masked local training + per-device timing, one dispatch
-            (final, cache_p, cached_steps, losses, steps_needed, fail,
-             success, times) = trainer(global_params, caches, draw, sel_d,
-                                       dist_d, res_d, base_steps,
-                                       cache_every)
-
-            # round termination on device: the cut is a device scalar and
-            # the receive mask stays sharded; deadline-capped rounds come
-            # back as a flag so the ledger bills the exact f64 deadline
-            t_cut, received, capped = cut_fn(times, plan.quorum, success)
-
             extra_w = ones_w if plan.agg_weights is None else \
                 self._from_plan(plan.agg_weights, np.float32)
-            global_params, caches = server_step(
-                global_params, caches, final, cache_p, cached_steps,
-                sel_d, fail, received, res_d, n_samples, extra_w, rnd)
+            if self.cohort is None:
+                # fused round body: workload + failure/interruption +
+                # masked local training + per-device timing, one dispatch
+                (final, cache_p, cached_steps, losses, steps_needed, fail,
+                 success, times) = trainer(global_params, caches, draw,
+                                           sel_d, dist_d, res_d,
+                                           base_steps, cache_every)
 
-            state = policy.observe(
-                state, plan,
-                RoundReport(received=received, fail=fail, losses=losses,
-                            durations=times, duration=t_cut, rnd=rnd))
+                # round termination on device: the cut is a device scalar
+                # and the receive mask stays sharded; deadline-capped
+                # rounds come back as a flag so the ledger bills the
+                # exact f64 deadline
+                t_cut, received, capped = cut_fn(times, plan.quorum,
+                                                 success)
+                overflow = None
+                global_params, caches = server_step(
+                    global_params, caches, final, cache_p, cached_steps,
+                    sel_d, fail, received, res_d, n_samples, extra_w, rnd)
+                report = RoundReport(received=received, fail=fail,
+                                     losses=losses, durations=times,
+                                     duration=t_cut, rnd=rnd)
+            else:
+                # compact cohort: the trainer gathers the selected rows
+                # into (X, ...) blocks on device and hands back scattered
+                # (N,) report views; cut + aggregation run over X rows
+                (final, cache_p, cached_steps, _losses_x, _steps_x, fail,
+                 success, times, idx, overflow, losses_n, fail_n,
+                 times_n) = trainer(global_params, caches, draw, sel_d,
+                                    dist_d, res_d, base_steps,
+                                    cache_every)
+                t_cut, _received_x, received, capped = cut_fn(
+                    times, plan.quorum, success, idx)
+                # observability seam (tests / debugging): the last
+                # round's device cohort index, still sharded
+                self._last_cohort_idx = idx
+                global_params, caches = server_step(
+                    global_params, caches, final, cache_p, cached_steps,
+                    idx, sel_d, fail, _received_x, res_d, n_samples,
+                    extra_w, rnd)
+                report = RoundReport(received=received, fail=fail_n,
+                                     losses=losses_n, durations=times_n,
+                                     duration=t_cut, rnd=rnd)
+
+            state = policy.observe(state, plan, report)
 
             evaluated = rnd % eval_every == 0 or rnd == n_rounds - 1
             acc_dev = self._acc_fn(global_params, self._test_x,
                                    self._test_y) if evaluated else None
-            ledger.push(rnd, evaluated, t_cut, capped, received.sum(),
-                        draw.download_mask(dist_d).sum(), sel_d.sum(),
-                        acc_dev)
+            recv_n, down_n, sel_n = _ledger_counts(
+                received, draw.online, dist_d, sel_d)
+            ledger.push(rnd, evaluated, t_cut, capped, recv_n,
+                        down_n, sel_n, acc_dev, overflow=overflow)
             if progress and rnd % 10 == 0:
                 ledger.resolve()        # live ticks resolve on schedule
             else:

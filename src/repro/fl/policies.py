@@ -49,12 +49,16 @@ class FludePolicyState(NamedTuple):
 # config sweep doesn't pin compiled executables for the process lifetime.
 @functools.lru_cache(maxsize=8)
 def _flude_plan_jit(fl_cfg, with_hints: bool):
-    if with_hints:
-        return jax.jit(lambda st, caches, online, rng, hints:
-                       core.plan_round(st, caches, online, fl_cfg, rng,
-                                       explore_hints=hints))
-    return jax.jit(lambda st, caches, online, rng, hints:
-                   core.plan_round(st, caches, online, fl_cfg, rng))
+    def planner(st, caches, online, rng, hints):
+        p = core.plan_round(st, caches, online, fl_cfg, rng,
+                            explore_hints=hints if with_hints else None)
+        # quorum clamp (can't wait for more receipts than selections)
+        # fused into the plan dispatch: eager it is three op-by-op
+        # round-trips per round; the f32 minimum here equals the host
+        # path's float() min bit-for-bit (both operands are exact f32)
+        q = jnp.minimum(p.quorum, p.selected.sum().astype(jnp.float32))
+        return p._replace(quorum=q)
+    return jax.jit(planner)
 
 
 @functools.lru_cache(maxsize=8)
@@ -66,6 +70,8 @@ def _flude_update_jit(fl_cfg):
 @register_policy("flude")
 class FludePolicy(Policy):
     uses_cache = True
+    # Alg. 2 line 3 caps X at clients_per_round before budget shrinking
+    selects_at_most_clients_per_round = True
 
     def __init__(self, sim_cfg, fl_cfg, fleet=None, mesh=None):
         super().__init__(sim_cfg, fl_cfg, fleet, mesh=mesh)
@@ -89,22 +95,19 @@ class FludePolicy(Policy):
     def plan(self, state, obs: RoundObservation, rng):
         if obs.draw is not None:
             # device round path: the online mask, the plan AND the quorum
-            # clamp stay on device, and RoundPlan.device runs structural
-            # checks only — planning is a pure dispatch, so the pipelined
-            # engine loop never drains the device queue here.  The f32
-            # minimum matches the host path's float() min bit-for-bit
-            # (both operands are exact float32 values).
+            # clamp stay on device (the clamp is fused into the plan
+            # jit), and RoundPlan.device runs structural checks only —
+            # planning is a pure dispatch, so the pipelined engine loop
+            # never drains the device queue here.
             p = self._plan_jit(state.core, obs.caches, obs.draw.online,
                                rng, self._hints)
-            quorum = jnp.minimum(p.quorum,
-                                 p.selected.sum().astype(jnp.float32))
             plan = RoundPlan.device(p.selected, p.distribute, p.resume,
-                                    quorum)
+                                    p.quorum)
             return FludePolicyState(state.core, p), plan
         # legacy host-RNG path: re-upload the numpy mask, validate on host
         p = self._plan_jit(state.core, obs.caches, jnp.asarray(obs.online),
                            rng, self._hints)
-        quorum = min(float(p.quorum), float(p.selected.sum()))
+        quorum = float(p.quorum)    # already clamped inside the plan jit
         # masks stay jax arrays: the engine consumes them in place, and
         # the host path's np.asarray sees equal values
         plan = RoundPlan.create(p.selected, p.distribute, p.resume, quorum)
@@ -130,6 +133,7 @@ class FludePolicy(Policy):
 @register_policy("random")
 class RandomPolicy(Policy):
     """Vanilla FedAvg: uniform random selection, full distribution."""
+    selects_at_most_clients_per_round = True
 
     def init_state(self) -> np.random.RandomState:
         return np.random.RandomState(self.sim_cfg.seed + 17)
@@ -156,6 +160,7 @@ class OortState:
 class OortPolicy(Policy):
     """Oort [OSDI'21], simplified: statistical utility = loss·sqrt(n) with a
     system-speed penalty, ε-greedy exploration."""
+    selects_at_most_clients_per_round = True
 
     def __init__(self, sim_cfg, fl_cfg, fleet=None, mesh=None):
         super().__init__(sim_cfg, fl_cfg, fleet, mesh=mesh)
@@ -211,6 +216,7 @@ class SafaPolicy(Policy):
     that is what makes it SEMI-async."""
     uses_cache = True
     quota = 0.75
+    selects_at_most_clients_per_round = True
 
     def __init__(self, sim_cfg, fl_cfg, fleet=None, mesh=None,
                  tau: int = 5):
@@ -243,6 +249,7 @@ class FedSeaPolicy(Policy):
     """FedSEA [SenSys'22], simplified: balance completion times by scaling
     local steps with device speed; deadline-based aggregation."""
     waits_for_stragglers = False
+    selects_at_most_clients_per_round = True
 
     def __init__(self, sim_cfg, fl_cfg, fleet=None, mesh=None):
         super().__init__(sim_cfg, fl_cfg, fleet, mesh=mesh)

@@ -51,6 +51,13 @@ class SimConfig:
     local_steps: int = 8
     batch_size: int = 32
     lr: float = 0.05
+    # classifier capacity (repro.fl.classifier MLP).  Defaults match the
+    # historical hard-coded model, so golden trajectories are untouched;
+    # the N=1M fleet-state smoke shrinks these (the C3 cache pytree is
+    # (N, params) — at a million clients the default ~17k-param model
+    # would need ~70 GB of cache alone).
+    model_hidden: int = 128
+    model_depth: int = 2
     # undependability (three groups, paper §5.2)
     undep_means: tuple = (0.2, 0.4, 0.6)
     undep_std: float = 0.2           # sqrt(0.04)

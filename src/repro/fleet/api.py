@@ -130,6 +130,26 @@ class FleetDraw:
         """
         return jnp.asarray(distribute) & self.online
 
+    def take(self, idx):
+        """Compact-cohort gather: the draw's rows at ``idx`` as a dense
+        (X,) FleetDraw.  Out-of-range sentinel rows (the cohort index
+        pads with N) fill with benign values — offline, failure
+        impossible (p=0 against u=1), unit bandwidth so the timing model
+        never divides by zero — matching what the full-scan path computes
+        for never-selected devices.
+        """
+        def g(a, fill):
+            return jnp.take(jnp.asarray(a), idx, axis=0, mode="fill",
+                            fill_value=fill)
+
+        return FleetDraw(
+            online=g(self.online, False),
+            fail_p=g(self.fail_p, 0.0),
+            fail_u=g(self.fail_u, 1.0),
+            stop_u=g(self.stop_u, 0.0),
+            bandwidth=g(self.bandwidth, 1.0),
+            battery=g(self.battery, 0.0))
+
 
 for _cls, _data in ((FleetState, ["t", "slot"]),
                     (FleetDraw, ["online", "fail_p", "fail_u", "stop_u",

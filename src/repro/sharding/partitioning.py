@@ -231,6 +231,40 @@ def place_fleet(tree, mesh: Optional[Mesh], num_clients: int):
                                                      num_clients))
 
 
+# -- compact cohorts: dense (X, ...) blocks gathered from (N, ...) state ----
+
+def cohort_spec(ndim: int) -> P:
+    """PartitionSpec for a gathered cohort block: same layout as the full
+    fleet — dim 0 (the X cohort rows) shards over ``clients``, the rest
+    replicated.  Kept as its own name so call sites say which of the two
+    row counts (X vs N) an array carries."""
+    return fleet_spec(ndim)
+
+
+def cohort_sharding(mesh: Mesh, ndim: int = 1) -> NamedSharding:
+    return NamedSharding(mesh, cohort_spec(ndim))
+
+
+def cohort_constraint(tree, mesh: Optional[Mesh], cohort_size: int):
+    """``with_sharding_constraint`` cohort specs on a gathered pytree
+    *inside* jit: every (X, ...) leaf is pinned to the client-axis
+    sharding (the gather's output would otherwise inherit whatever
+    layout GSPMD propagated from the (N,)-sized operand).  Identity when
+    ``mesh`` is None.  The engine requires ``cohort_size %
+    fleet_axis_size(mesh) == 0`` (FLConfig validation), so the pin never
+    falls back to replicated."""
+    return fleet_constraint(tree, mesh, cohort_size)
+
+
+def cohort_scatter_constraint(tree, mesh: Optional[Mesh],
+                              num_clients: int):
+    """Pin scatter *outputs* — (N, ...) fleet state rebuilt from cohort
+    rows — back onto the fleet placement, so a compact round's cache
+    writes and receive masks land exactly where ``place_fleet`` put the
+    originals and steady-state rounds never reshard."""
+    return fleet_constraint(tree, mesh, num_clients)
+
+
 def _dp_size(mesh: Mesh) -> int:
     sizes = _axis_sizes(mesh)
     return int(np.prod([sizes[a] for a in fsdp_axes(mesh)] or [1]))

@@ -1,0 +1,367 @@
+"""Compact selected-cohort round path (``FLConfig.cohort_size``).
+
+Covers, on a single device (the sharded variant is the slow subprocess
+test at the bottom):
+
+* static validation of the cohort contract — config shape checks, the
+  policy selection-bound check (names the policy), host-side dynamics
+  rejection;
+* ``cohort_index`` / ``cohort_overflow`` semantics (ascending ids,
+  sentinel padding, truncation);
+* gather→update→scatter round trips against the full-fleet cache ops
+  (seeded-random sweeps here; the hypothesis versions live in
+  ``test_cohort_properties.py``);
+* compact-vs-full golden parity: every registered policy, pad-exercising
+  cohorts, pipelined depths — bit-identical ``History``;
+* zero new per-round host→device transfers, and ``server_step_memory``
+  reporting the active (X, D) packed buffer;
+* runtime overflow detection deferred through the round ledger.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.configs.base import FLConfig
+from repro.data.synthetic import federated_classification
+from repro.fl import FleetEngine, SimConfig, available_policies
+from repro.fl.api import cohort_index, cohort_overflow
+from repro.fl.policies import MifaPolicy
+
+N = 32
+SIM = SimConfig(num_clients=N, rounds=3, local_steps=2, batch_size=8,
+                seed=3)
+FL = FLConfig(num_clients=N, clients_per_round=8, dynamics="markov")
+
+
+@pytest.fixture(scope="module")
+def data():
+    return federated_classification(N, seed=4, n_per_client=16)
+
+
+def _run(data, fl, policy, **kw):
+    return FleetEngine(data, SIM, fl).run(policy, diagnostics=False, **kw)
+
+
+def _assert_hist_equal(a, b, ctx=""):
+    """Bitwise History equality — the compact path's exactness contract."""
+    for f in ("acc", "comm_mb", "wall_clock", "received", "selected"):
+        assert getattr(a, f) == getattr(b, f), (ctx, f)
+
+
+# ---------------------------------------------------------------------------
+# Static validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [0, -3, True, 2.0])
+def test_cohort_size_rejects_non_positive_int(bad):
+    with pytest.raises(ValueError, match="cohort_size"):
+        FLConfig(num_clients=N, cohort_size=bad)
+
+
+def test_cohort_size_rejects_larger_than_fleet():
+    with pytest.raises(ValueError, match="exceeds num_clients"):
+        FLConfig(num_clients=N, cohort_size=2 * N)
+
+
+def test_cohort_size_rejects_mesh_indivisible():
+    with pytest.raises(ValueError, match="divisible"):
+        FLConfig(num_clients=N, cohort_size=12, mesh_shape=(8,))
+    # divisible is fine
+    FLConfig(num_clients=N, cohort_size=16, mesh_shape=(8,))
+
+
+def test_cohort_rejects_host_side_dynamics(data):
+    fl = dataclasses.replace(FL, dynamics="bernoulli_host", cohort_size=8)
+    with pytest.raises(ValueError, match="bernoulli_host"):
+        FleetEngine(data, SIM, fl)
+
+
+def test_cohort_smaller_than_policy_bound_rejected(data):
+    """Select-all policies (bound = N) must not run under a small cohort —
+    the error names the policy and the bound."""
+    fl = dataclasses.replace(FL, cohort_size=8)
+    with pytest.raises(ValueError, match=r"'mifa'.*32"):
+        _run(data, fl, "mifa")
+
+
+# ---------------------------------------------------------------------------
+# cohort_index / cohort_overflow semantics
+# ---------------------------------------------------------------------------
+
+def test_cohort_index_ascending_with_sentinel_padding():
+    sel = np.zeros(N, bool)
+    sel[[3, 17, 5]] = True
+    idx = np.asarray(cohort_index(sel, 6))
+    assert idx.tolist() == [3, 5, 17, N, N, N]
+    assert not bool(cohort_overflow(sel, 6))
+    assert not bool(cohort_overflow(sel, 3))
+
+
+def test_cohort_index_truncates_and_flags_overflow():
+    sel = np.zeros(N, bool)
+    sel[[1, 2, 8, 30]] = True
+    idx = np.asarray(cohort_index(sel, 3))
+    assert idx.tolist() == [1, 2, 8]        # lowest ids win
+    assert bool(cohort_overflow(sel, 3))
+
+
+# ---------------------------------------------------------------------------
+# Gather / scatter round trips vs the full-fleet cache ops (seeded sweep)
+# ---------------------------------------------------------------------------
+
+def _rand_caches(rng, n):
+    params = {"w": jnp.asarray(rng.randn(n, 3, 2), jnp.float32),
+              "b": jnp.asarray(rng.randn(n, 4), jnp.float32)}
+    return core.ClientCaches(
+        params,
+        jnp.asarray(rng.rand(n), jnp.float32),
+        jnp.asarray(rng.randint(-1, 5, n), jnp.int32))
+
+
+def _scatter_full(rng, idx, mask_x, n, shape):
+    """(N,)-shaped array whose cohort rows hold given (X,)-leading values
+    (rows outside the write mask hold junk — the full-path ops must not
+    read them)."""
+    vals = jnp.asarray(rng.randn(*((len(idx),) + shape)), jnp.float32)
+    full = jnp.asarray(rng.randn(*((n,) + shape)), jnp.float32)
+    target = jnp.where(mask_x, idx, n)
+    return vals, full.at[target].set(vals, mode="drop")
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_gather_scatter_matches_full_cache_ops(seed):
+    rng = np.random.RandomState(seed)
+    n = 24
+    x = int(rng.randint(2, n + 1))
+    sel = rng.rand(n) < rng.rand()
+    while sel.sum() > x:
+        sel[np.flatnonzero(sel)[-1]] = False
+    idx = cohort_index(sel, x)
+    caches = _rand_caches(rng, n)
+
+    # gather: real rows match, pad rows read as empty slots
+    g = core.gather_caches(caches, idx)
+    ids = np.flatnonzero(sel)
+    k = len(ids)
+    for key in ("w", "b"):
+        np.testing.assert_array_equal(np.asarray(g.params[key])[:k],
+                                      np.asarray(caches.params[key])[ids])
+        assert not np.asarray(g.params[key])[k:].any()
+    np.testing.assert_array_equal(np.asarray(g.progress)[:k],
+                                  np.asarray(caches.progress)[ids])
+    assert (np.asarray(g.progress)[k:] == 0.0).all()
+    assert (np.asarray(g.round_stamp)[k:] == -1).all()
+
+    # scatter-write == full write_cache on the equivalent (N,) mask
+    mask_x = jnp.asarray((rng.rand(x) < 0.6) & (np.asarray(idx) < n))
+    w_x, w_n = _scatter_full(rng, idx, mask_x, n, (3, 2))
+    b_x, b_n = _scatter_full(rng, idx, mask_x, n, (4,))
+    p_x, p_n = _scatter_full(rng, idx, mask_x, n, ())
+    mask_n = jnp.zeros(n, bool).at[jnp.where(mask_x, idx, n)].set(
+        True, mode="drop")
+    got = core.scatter_write_cache(caches, idx, mask_x,
+                                   {"w": w_x, "b": b_x}, p_x, 7)
+    want = core.write_cache(caches, mask_n, {"w": w_n, "b": b_n}, p_n, 7)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        got, want)
+
+    # scatter-clear == full clear_cache
+    got_c = core.scatter_clear_cache(caches, idx, mask_x)
+    want_c = core.clear_cache(caches, mask_n)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        got_c, want_c)
+
+
+# ---------------------------------------------------------------------------
+# Compact-vs-full golden parity (single device, bit-identical)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", sorted(available_policies()))
+def test_policy_parity_compact_vs_full(policy, data):
+    """Every registered policy: the compact path replays the full-scan
+    History bit for bit (accuracy, comm, wall clock, counts)."""
+    bounded = policy not in ("mifa", "asyncfeded")
+    x = 8 if bounded else N
+    full = _run(data, FL, policy)
+    compact = _run(data, dataclasses.replace(FL, cohort_size=x), policy)
+    _assert_hist_equal(full, compact, policy)
+
+
+def test_parity_with_padded_cohort(data):
+    """X strictly larger than any selection: sentinel rows ride through
+    training, cut, aggregation and all scatters without a trace."""
+    full = _run(data, FL, "flude")
+    for x in (12, N):
+        compact = _run(data, dataclasses.replace(FL, cohort_size=x),
+                       "flude")
+        _assert_hist_equal(full, compact, f"X={x}")
+
+
+def test_parity_across_dynamics(data):
+    for dyn in ("bernoulli", "sessions"):
+        fl = dataclasses.replace(FL, dynamics=dyn)
+        full = _run(data, fl, "flude")
+        compact = _run(data, dataclasses.replace(fl, cohort_size=8),
+                       "flude")
+        _assert_hist_equal(full, compact, dyn)
+
+
+def test_parity_pipelined(data):
+    """Pipelining interacts only with scheduling: depth 1 == depth 4 on
+    the compact path, both equal to the full scan."""
+    full = _run(data, FL, "flude")
+    for depth in (1, 4):
+        fl = dataclasses.replace(FL, cohort_size=8, pipeline_depth=depth)
+        _assert_hist_equal(full, _run(data, fl, "flude"), f"depth={depth}")
+
+
+# ---------------------------------------------------------------------------
+# Host transfers and memory profile
+# ---------------------------------------------------------------------------
+
+def test_cohort_adds_no_per_round_transfers(data, monkeypatch):
+    """The cohort index is derived on device from the selection mask —
+    per-round ``place_per_client`` hand-offs stay round-count-independent
+    and identical to the full-scan path."""
+    import repro.fl.engine as ENG
+    import repro.fl.policies as POL
+    import repro.fl.simulator as SIMM
+
+    counts = {"n": 0}
+    orig = SIMM.place_per_client
+
+    def counting(arr, mesh=None):
+        counts["n"] += 1
+        return orig(arr, mesh)
+
+    for mod in (ENG, POL, SIMM):
+        monkeypatch.setattr(mod, "place_per_client", counting)
+
+    per_path = {}
+    for label, fl in (("full", FL),
+                      ("cohort", dataclasses.replace(FL, cohort_size=8))):
+        engine = FleetEngine(data, SIM, fl)
+        engine.run("flude", diagnostics=False)      # compile + place
+        per_run = []
+        for rounds in (1, 3):
+            counts["n"] = 0
+            engine.run("flude", rounds=rounds, diagnostics=False)
+            per_run.append(counts["n"])
+        assert per_run[0] == per_run[1], (label, per_run)
+        per_path[label] = per_run[0]
+    assert per_path["cohort"] == per_path["full"], per_path
+
+
+def test_server_step_memory_reports_packed_cohort_buffer(data):
+    """The memory profile describes the *active* step: with a cohort the
+    packed aggregation buffer is (X, D), not (N, D)."""
+    x = 8
+    full = FleetEngine(data, SIM, FL)
+    compact = FleetEngine(data, SIM,
+                          dataclasses.replace(FL, cohort_size=x))
+    dim = core.pack_layout(full._template).dim
+    mf = full.server_step_memory()
+    mc = compact.server_step_memory()
+    assert mf["packed_rows"] == N
+    assert mf["packed_buffer_bytes"] == N * dim * 4
+    assert mc["packed_rows"] == x
+    assert mc["packed_buffer_bytes"] == x * dim * 4
+    assert mc["peak_live_bytes"] < mf["peak_live_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# Runtime overflow (deferred through the round ledger)
+# ---------------------------------------------------------------------------
+
+class _LyingMifa(MifaPolicy):
+    """Claims the bounded-selection trait while selecting every online
+    client — defeats the static bound check so the *runtime* overflow
+    flag has to catch the truncation."""
+    selects_at_most_clients_per_round = True
+
+
+def test_runtime_overflow_raises(data):
+    fl = dataclasses.replace(FL, cohort_size=8)
+    engine = FleetEngine(data, SIM, fl)
+    pol = _LyingMifa(SIM, fl, mesh=engine.mesh)
+    with pytest.raises(RuntimeError, match="cohort overflow"):
+        engine.run(pol, diagnostics=False)
+
+
+# ---------------------------------------------------------------------------
+# Sharded (8 forced host devices) compact round path
+# ---------------------------------------------------------------------------
+
+def _run_script(script, timeout=540):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+_MESH_SCRIPT = r"""
+from repro.launch.mesh import force_host_platform_device_count
+force_host_platform_device_count(8)
+import dataclasses
+import json
+import jax
+
+from repro.configs.base import FLConfig
+from repro.data.synthetic import federated_classification
+from repro.fl import FleetEngine, SimConfig
+
+n = 32
+data = federated_classification(n, seed=0, n_per_client=32)
+sim = SimConfig(num_clients=n, rounds=3, seed=0, local_steps=2)
+out = {"n_dev": len(jax.devices()), "cases": {}}
+
+for pol, x in (("flude", 8), ("flude", 16), ("mifa", 32)):
+    fl = FLConfig(num_clients=n, clients_per_round=8, dynamics="markov",
+                  mesh_shape=(8,))
+    ref = FleetEngine(data, sim, fl).run(pol, diagnostics=False)
+    engine = FleetEngine(data, sim,
+                         dataclasses.replace(fl, cohort_size=x))
+    h = engine.run(pol, diagnostics=False)
+    idx = engine._last_cohort_idx
+    out["cases"][f"{pol}-x{x}"] = {
+        "ints_exact": (h.received == ref.received
+                       and h.selected == ref.selected
+                       and h.wall_clock == ref.wall_clock),
+        "acc_err": float(max(abs(a - b)
+                             for a, b in zip(h.acc, ref.acc))),
+        "idx_shape": list(idx.shape),
+        "idx_shards": len(idx.sharding.device_set),
+    }
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_compact_round_path():
+    """Compact vs full-scan over 8 forced host devices: the integer
+    trajectory (received/selected/wall clock) is exact and accuracy agrees
+    to float tolerance (the sharded psum reassociates the same summands);
+    the cohort index itself lives sharded over the client mesh."""
+    rec = _run_script(_MESH_SCRIPT)
+    assert rec["n_dev"] == 8
+    for case, r in rec["cases"].items():
+        assert r["ints_exact"], (case, r)
+        assert r["acc_err"] < 1e-6, (case, r)
+        x = int(case.split("x")[-1])
+        assert r["idx_shape"] == [x], (case, r)
+        assert r["idx_shards"] == 8, (case, r)

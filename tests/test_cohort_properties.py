@@ -1,0 +1,91 @@
+"""Hypothesis property tests for the compact-cohort gather/scatter ops.
+
+``test_cohort.py`` holds seeded-random sweeps of the same invariants so
+coverage survives without the hypothesis dependency; this module widens
+the search (arbitrary fleet sizes, masks, cohort widths, including the
+truncating overflow regime) where hypothesis is available.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro import core
+from repro.fl.api import cohort_index, cohort_overflow
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _mask(draw_bits, n):
+    return np.array([(draw_bits >> i) & 1 == 1 for i in range(n)])
+
+
+@given(st.integers(2, 48), st.integers(1, 48),
+       st.integers(0, 2 ** 48 - 1))
+def test_cohort_index_sorted_padded_and_overflow_flag(n, x, bits):
+    """The index is the ascending selected ids, truncated to the lowest
+    X, padded with the sentinel N; the overflow flag fires iff the
+    selection count exceeds X."""
+    x = min(x, n)
+    sel = _mask(bits, n)
+    idx = np.asarray(cohort_index(sel, x))
+    ids = np.flatnonzero(sel)
+    k = min(len(ids), x)
+    assert idx.shape == (x,)
+    assert idx[:k].tolist() == ids[:k].tolist()
+    assert (idx[k:] == n).all()
+    assert bool(cohort_overflow(sel, x)) == (len(ids) > x)
+
+
+@given(st.integers(2, 32), st.integers(1, 32),
+       st.integers(0, 2 ** 32 - 1), st.integers(0, 2 ** 31 - 1))
+def test_gather_scatter_roundtrip_equals_full_ops(n, x, bits, seed):
+    """gather → masked update → scatter equals the full-fleet
+    write_cache/clear_cache for any mask that is zero outside the cohort
+    (which every engine write mask is: writes require selection)."""
+    x = min(x, n)
+    sel = _mask(bits, n)
+    ids = np.flatnonzero(sel)[:x]          # cohort truncates to lowest X
+    rng = np.random.RandomState(seed)
+    idx = cohort_index(sel, x)
+
+    caches = core.ClientCaches(
+        {"w": jnp.asarray(rng.randn(n, 2, 3), jnp.float32)},
+        jnp.asarray(rng.rand(n), jnp.float32),
+        jnp.asarray(rng.randint(-1, 4, n), jnp.int32))
+
+    g = core.gather_caches(caches, idx)
+    k = len(ids)
+    np.testing.assert_array_equal(np.asarray(g.params["w"])[:k],
+                                  np.asarray(caches.params["w"])[ids])
+    assert not np.asarray(g.params["w"])[k:].any()
+    assert (np.asarray(g.round_stamp)[k:] == -1).all()
+
+    mask_x = jnp.asarray((rng.rand(x) < 0.5) & (np.asarray(idx) < n))
+    target = jnp.where(mask_x, idx, n)
+    mask_n = jnp.zeros(n, bool).at[target].set(True, mode="drop")
+    w_x = jnp.asarray(rng.randn(x, 2, 3), jnp.float32)
+    w_n = jnp.asarray(rng.randn(n, 2, 3), jnp.float32) \
+        .at[target].set(w_x, mode="drop")
+    p_x = jnp.asarray(rng.rand(x), jnp.float32)
+    p_n = jnp.asarray(rng.rand(n), jnp.float32) \
+        .at[target].set(p_x, mode="drop")
+
+    got = core.scatter_write_cache(caches, idx, mask_x, {"w": w_x},
+                                   p_x, 5)
+    want = core.write_cache(caches, mask_n, {"w": w_n}, p_n, 5)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        got, want)
+
+    got_c = core.scatter_clear_cache(caches, idx, mask_x)
+    want_c = core.clear_cache(caches, mask_n)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        got_c, want_c)
