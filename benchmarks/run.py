@@ -23,7 +23,7 @@ def main() -> None:
     from benchmarks import (bench_ablation_selector, bench_beyond,
                             bench_engine, bench_fig1, bench_fig2,
                             bench_fig5, bench_fig7, bench_fig8, bench_fig9,
-                            bench_kernels, bench_roofline,
+                            bench_kernels, bench_robust, bench_roofline,
                             bench_server_step, bench_table1)
     benches = {
         "table1": bench_table1,
@@ -36,6 +36,8 @@ def main() -> None:
         "fig9": bench_fig9,
         "beyond_selection": bench_beyond,
         "kernels": bench_kernels,
+        # robust aggregation rules vs Byzantine attack fractions
+        "robust": bench_robust,
         "roofline": bench_roofline,
         "server_step": bench_server_step,
         "engine": bench_engine,

@@ -9,13 +9,23 @@ dynamics scenario from the registry (``repro.fleet.scenarios`` — markov
 churn, diurnal sessions, flash crowds, correlated dropout, trace
 replay), printing each scenario's availability profile first.
 
+``--attack NAME`` runs the robust-aggregation comparison under a named
+adversarial scenario (``sign-flip-10``, ``sign-flip-20``,
+``label-flip-20``, ``grad-scale-10``): every registered ``agg_rule`` is
+trained against the same poisoned fleet and the final accuracies are
+printed side by side — the weighted mean degrades, the robust rules
+hold.
+
     PYTHONPATH=src python examples/undependable_fleet.py
     PYTHONPATH=src python examples/undependable_fleet.py --scenario diurnal
     PYTHONPATH=src python examples/undependable_fleet.py --scenario all
+    PYTHONPATH=src python examples/undependable_fleet.py --attack sign-flip-20
 """
 import argparse
+import dataclasses
 
 from repro.configs.base import FLConfig
+from repro.core import available_agg_rules
 from repro.data.synthetic import federated_classification
 from repro.fl import FleetEngine, SimConfig
 from repro.fleet import (apply_scenario, availability_summary,
@@ -74,14 +84,48 @@ def scenario_run(names):
                   f"wall {h.wall_clock[-1]:.0f}s")
 
 
+def attack_run(name):
+    n = 60
+    data = federated_classification(n, seed=1, margin=1.4, noise=1.3)
+    sim = SimConfig(num_clients=n, rounds=30, seed=0,
+                    undep_means=(0.4,) * 3)
+    sc = get_scenario(name)
+    frac = dict(sc.adversary_params).get("malicious_frac", 0.0)
+    print(f"== attack {name!r}: {sc.adversary} at {frac:.0%} malicious ==")
+    print(f"  {sc.description}")
+    base = apply_scenario(FLConfig(num_clients=n, clients_per_round=15),
+                          name)
+    clean = FleetEngine(
+        data, sim, dataclasses.replace(base, adversary=None,
+                                       adversary_params=())
+    ).run("flude").acc[-1]
+    print(f"  (clean fleet, mean aggregation: acc {clean:.4f})")
+    for rule in available_agg_rules():
+        fl = dataclasses.replace(base, agg_rule=rule)
+        h = FleetEngine(data, sim, fl).run("flude")
+        print(f"  agg_rule={rule:18s} acc {h.acc[-1]:.4f}  "
+              f"({h.acc[-1] / max(clean, 1e-9):5.1%} of clean)")
+
+
+_ATTACKS = ("sign-flip-10", "sign-flip-20", "label-flip-20",
+            "grad-scale-10")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scenario", default=None,
                     choices=sorted(available_scenarios()) + ["all"],
                     help="run under a named fleet-dynamics scenario "
                          "(default: the paper's undependability sweep)")
+    ap.add_argument("--attack", default=None,
+                    choices=sorted(_ATTACKS) + ["all"],
+                    help="run every registered agg_rule against a named "
+                         "adversarial scenario and compare final accuracy")
     args = ap.parse_args()
-    if args.scenario is None:
+    if args.attack is not None:
+        for name in (_ATTACKS if args.attack == "all" else [args.attack]):
+            attack_run(name)
+    elif args.scenario is None:
         paper_sweep()
     elif args.scenario == "all":
         scenario_run(available_scenarios())

@@ -247,6 +247,23 @@ class FLConfig:
     agg_impl: str = "xla"              # xla | pallas | pallas_interpret
     agg_block_c: int = 8               # client-axis tile of the Pallas kernel
     agg_block_d: int = 2048            # packed-param-axis tile
+    agg_rule: str = "mean"
+    # ^ registered robust-aggregation rule (repro.core.agg_rules):
+    #   "mean" (the historical weighted mean — bit-identical default),
+    #   "geometric_median" (smoothed Weiszfeld / RFA), "trimmed_mean"
+    #   (coordinate-wise), "trust" (per-client trust state learned on
+    #   device from update-deviation norms).  Orthogonal to agg_impl.
+    agg_rule_params: Tuple[Tuple[str, Any], ...] = ()
+    # ^ hashable ((key, value), ...) pairs forwarded to the rule
+    #   constructor (e.g. (("iters", 8),) for geometric_median)
+    adversary: Optional[str] = None
+    # ^ registered attack model (repro.fleet.adversary): a deterministic
+    #   malicious_frac slice of the fleet misbehaves — "label_flip"
+    #   corrupts local labels, "sign_flip"/"grad_scale" transform the
+    #   malicious uploads inside the jitted server step.  None = benign.
+    adversary_params: Tuple[Tuple[str, Any], ...] = ()
+    # ^ hashable ((key, value), ...) pairs forwarded to the adversary
+    #   constructor (e.g. (("malicious_frac", 0.2),))
     # mesh & memory (cross-device round path)
     mesh_shape: Optional[Tuple[int, ...]] = None
     # ^ (k,) shards the fleet k-ways over the ("clients",) mesh axis
@@ -297,6 +314,27 @@ class FLConfig:
     #   resolve every round regardless (the budget check needs cum_time).
 
     def __post_init__(self):
+        if self.agg_impl not in ("xla", "pallas", "pallas_interpret"):
+            raise ValueError(
+                f"FLConfig.agg_impl must be one of 'xla', 'pallas', "
+                f"'pallas_interpret', got {self.agg_impl!r}")
+        # registry lookups fail fast at construction instead of deep
+        # inside the jitted round step; imported lazily — the registries
+        # live above configs in the import graph
+        if self.agg_rule != "mean":
+            from repro.core.agg_rules import available_agg_rules
+            if self.agg_rule not in available_agg_rules():
+                raise ValueError(
+                    f"FLConfig.agg_rule must be a registered agg rule "
+                    f"({', '.join(available_agg_rules())}), got "
+                    f"{self.agg_rule!r}")
+        if self.adversary is not None:
+            from repro.fleet.adversary import available_adversaries
+            if self.adversary not in available_adversaries():
+                raise ValueError(
+                    f"FLConfig.adversary must be a registered adversary "
+                    f"({', '.join(available_adversaries())}) or None, "
+                    f"got {self.adversary!r}")
         x = self.cohort_size
         if x is None:
             return

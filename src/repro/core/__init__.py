@@ -21,3 +21,7 @@ from repro.core.round import (FludePlan, FludeState, host_round_cut,
                               init_state, make_round_cut,
                               make_server_round_step, plan_round,
                               receive_quorum, update_after_round)
+from repro.core.agg_rules import (AggRule, GeometricMedianRule, MeanRule,
+                                  TrimmedMeanRule, TrustRule,
+                                  available_agg_rules, get_agg_rule,
+                                  make_agg_rule, register_agg_rule)

@@ -121,6 +121,9 @@ def plan_round(state: FludeState, caches: C.ClientCaches,
 
 def make_server_round_step(template_params, *, local_steps: int,
                            agg_impl: str = "xla",
+                           agg_rule: str = "mean",
+                           agg_rule_params: tuple = (),
+                           adversary_scale: Optional[float] = None,
                            staleness_discount: float = 1.0,
                            uses_cache: bool = True,
                            block_c: int = 8, block_d: int = 2048,
@@ -162,9 +165,80 @@ def make_server_round_step(template_params, *, local_steps: int,
     regroup across shards and the psum reassociates (integer trajectory
     exact, accuracies to float tolerance — same contract as the sharded
     full scan vs single device).
+
+    ``agg_rule`` / ``agg_rule_params``: the robust-aggregation axis
+    (``repro.core.agg_rules``), orthogonal to ``agg_impl``.  The default
+    ``"mean"`` keeps the historical direct ``fed_aggregate_packed`` call
+    — the traced jaxpr (and therefore the trajectory) is bit-identical
+    to the pre-registry step.  Non-mean rules pack the stacked trainer
+    outputs once and run the rule's reduction on the (C, D) buffer; a
+    *stateful* rule ("trust") appends one (N,) state input and output to
+    the jitted signature — the engine threads it like the caches, so
+    rounds still sync nothing.
+
+    ``adversary_scale``: when set, the returned step additionally takes
+    an (N,) malicious mask (appended after ``rnd``, before any rule
+    state) and transforms the marked clients' uploads inside the jit:
+    ``u' = g + adversary_scale * (u - g)`` — the model-poisoning channel
+    of ``repro.fleet.adversary``.  Benign runs compile the attack out.
     """
     layout = AGG.pack_layout(template_params)
     donate_argnums = (0, 1) if donate else ()
+    rule = None
+    if agg_rule not in (None, "mean"):
+        from repro.core.agg_rules import make_agg_rule
+        rule = make_agg_rule(agg_rule, agg_rule_params)
+    stateful = rule is not None and rule.stateful
+    has_adv = adversary_scale is not None
+
+    def poison(final_params, global_params, mal_rows):
+        """Model-poisoning transform on the malicious rows (stacked
+        leaves), against the round's base model."""
+        s = float(adversary_scale)
+
+        def pz(f, g):
+            m = mal_rows.reshape((-1,) + (1,) * (f.ndim - 1))
+            g32 = g.astype(jnp.float32)[None]
+            return jnp.where(m, (g32 + s * (f.astype(jnp.float32) - g32))
+                             .astype(f.dtype), f)
+
+        return jax.tree.map(pz, final_params, global_params)
+
+    def aggregate(global_params, final_params, w, rule_state):
+        """Dispatch the configured rule.  Returns ``(new_global,
+        new_rule_state)`` — state rows pass through untouched for
+        stateless rules."""
+        if rule is None:
+            new_global = AGG.fed_aggregate_packed(
+                global_params, final_params, w, layout, impl=agg_impl,
+                block_c=block_c, block_d=block_d, mesh=mesh)
+            return new_global, rule_state
+        buf = AGG.pack_stacked(final_params, layout)     # (C, D) fp32
+        gvec = AGG.pack(global_params, layout)           # (D,) fp32
+        kw = dict(impl=agg_impl, block_c=block_c, block_d=block_d,
+                  mesh=mesh)
+        if stateful:
+            vec, rule_state = rule.reduce_stateful(buf, gvec, w,
+                                                   rule_state, **kw)
+        else:
+            vec = rule.reduce(buf, gvec, w, **kw)
+        any_received = w.sum() > 0
+        new_global = jax.tree.map(
+            lambda avg, g: jnp.where(any_received, avg, g),
+            AGG.unpack(vec, layout), global_params)
+        return new_global, rule_state
+
+    def split_extra(extra):
+        """(malicious, rule_state) from the trailing jit args."""
+        expect = int(has_adv) + int(stateful)
+        if len(extra) != expect:
+            raise TypeError(
+                f"server round step expects {expect} trailing arg(s) "
+                f"(adversary mask: {has_adv}, rule state: {stateful}), "
+                f"got {len(extra)}")
+        malicious = extra[0] if has_adv else None
+        rule_state = extra[-1] if stateful else None
+        return malicious, rule_state
 
     if cohort_size is not None:
         @functools.partial(jax.jit, donate_argnums=donate_argnums)
@@ -173,8 +247,8 @@ def make_server_round_step(template_params, *, local_steps: int,
                                      final_params, cache_params,
                                      cached_steps, idx, selected, fail,
                                      received, resume, n_samples,
-                                     extra_weights, rnd):
-            """-> (new_global_params, new_caches).
+                                     extra_weights, rnd, *extra):
+            """-> (new_global_params, new_caches[, new_rule_state]).
 
             final_params / cache_params / cached_steps and the
             ``fail``/``received`` masks are (X,)-leading cohort blocks
@@ -182,10 +256,14 @@ def make_server_round_step(template_params, *, local_steps: int,
             index (sentinel-padded).  ``selected``/``resume`` arrive as
             the (N,) plan masks the engine holds and are gathered here;
             caches / n_samples / extra_weights stay (N,)-sized — the
-            only fleet-proportional state the step touches.
+            only fleet-proportional state the step touches.  ``extra``
+            appends the (N,) malicious mask (adversary configured) and
+            the (N,) rule state (stateful rule) — both gathered here
+            and, for the state, scattered back.
             """
             from repro.sharding import partitioning as SP
 
+            malicious, rule_state = split_extra(extra)
             rnd = jnp.asarray(rnd, jnp.int32)
 
             def take(a, fill):
@@ -204,9 +282,20 @@ def make_server_round_step(template_params, *, local_steps: int,
                 staleness_discount=staleness_discount) \
                 * take(extra_weights, 0.0)
             w = SP.cohort_constraint(w, mesh, cohort_size)
-            new_global = AGG.fed_aggregate_packed(
-                global_params, final_params, w, layout, impl=agg_impl,
-                block_c=block_c, block_d=block_d, mesh=mesh)
+            if has_adv:
+                mal_x = SP.cohort_constraint(take(malicious, False),
+                                             mesh, cohort_size)
+                final_params = poison(final_params, global_params, mal_x)
+            state_x = None
+            if stateful:
+                state_x = SP.cohort_constraint(take(rule_state, 0.0),
+                                               mesh, cohort_size)
+            new_global, state_x = aggregate(global_params, final_params,
+                                            w, state_x)
+            if stateful:
+                rule_state = rule_state.at[idx].set(state_x, mode="drop")
+                rule_state = SP.cohort_scatter_constraint(
+                    rule_state, mesh, rule_state.shape[0])
             if uses_cache:
                 prior_steps = jnp.round(
                     take(caches.progress, 0.0) * local_steps
@@ -222,6 +311,8 @@ def make_server_round_step(template_params, *, local_steps: int,
                 caches = C.scatter_clear_cache(caches, idx, received)
                 caches = SP.cohort_scatter_constraint(
                     caches, mesh, caches.progress.shape[0])
+            if stateful:
+                return new_global, caches, rule_state
             return new_global, caches
 
         return server_round_step_cohort
@@ -230,14 +321,17 @@ def make_server_round_step(template_params, *, local_steps: int,
     def server_round_step(global_params, caches: C.ClientCaches,
                           final_params, cache_params, cached_steps,
                           selected, fail, received, resume,
-                          n_samples, extra_weights, rnd):
-        """-> (new_global_params, new_caches).
+                          n_samples, extra_weights, rnd, *extra):
+        """-> (new_global_params, new_caches[, new_rule_state]).
 
         final_params / cache_params: stacked (N, ...) trainer outputs.
         selected/fail/received/resume: (N,) bool round masks.
         extra_weights: (N,) policy weight multiplier (ones if unused).
         rnd: scalar int32 — current round index.
+        extra: the (N,) malicious mask (adversary configured) then the
+        (N,) rule state (stateful rule) — see the factory docstring.
         """
+        malicious, rule_state = split_extra(extra)
         rnd = jnp.asarray(rnd, jnp.int32)
         stamp = caches.round_stamp
         # staleness of the BASE model each update was trained from
@@ -247,9 +341,10 @@ def make_server_round_step(template_params, *, local_steps: int,
         w = AGG.aggregation_weights(
             received, n_samples=n_samples, staleness=base_stale,
             staleness_discount=staleness_discount) * extra_weights
-        new_global = AGG.fed_aggregate_packed(
-            global_params, final_params, w, layout, impl=agg_impl,
-            block_c=block_c, block_d=block_d, mesh=mesh)
+        if has_adv:
+            final_params = poison(final_params, global_params, malicious)
+        new_global, rule_state = aggregate(global_params, final_params,
+                                           w, rule_state)
         if uses_cache:
             prior_steps = jnp.round(
                 caches.progress * local_steps).astype(jnp.int32)
@@ -261,6 +356,8 @@ def make_server_round_step(template_params, *, local_steps: int,
                 (total_cached / max(local_steps, 1)).astype(jnp.float32),
                 base_round)
             caches = C.clear_cache(caches, received)
+        if stateful:
+            return new_global, caches, rule_state
         return new_global, caches
 
     return server_round_step

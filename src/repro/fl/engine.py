@@ -45,7 +45,8 @@ from repro.fl.api import (Policy, RoundObservation, RoundPlan, RoundReport,
                           cohort_index, cohort_overflow, make_policy)
 from repro.fl import policies as _builtin_policies  # noqa: F401  (registers)
 from repro.fl.simulator import Fleet, SimConfig, place_per_client
-from repro.fleet import get_dynamics, make_dynamics  # registers processes
+from repro.fleet import (get_dynamics, make_adversary,  # registers processes
+                         make_dynamics)
 from repro.launch.mesh import make_fleet_mesh
 from repro.sharding import partitioning as SP
 
@@ -448,6 +449,33 @@ class FleetEngine:
 
     def __init__(self, data: FederatedClassification, sim_cfg: SimConfig,
                  fl_cfg: FLConfig, fleet: Optional[Fleet] = None):
+        # adversarial fleet (repro.fleet.adversary): resolve the attack
+        # model up front — the malicious mask is drawn once (determin-
+        # istic in the sim seed), label poisoning rewrites the training
+        # set before the trainer ever sees it, and model poisoning rides
+        # inside the jitted server step via ``adversary_scale``.  Rounds
+        # add zero host syncs either way.
+        self._adversary = None
+        self._adv_scale = None
+        self._malicious_np = None
+        if fl_cfg.adversary is not None:
+            self._adversary = make_adversary(fl_cfg.adversary,
+                                             fl_cfg.adversary_params)
+            self._malicious_np = self._adversary.malicious_mask(
+                fl_cfg.num_clients, sim_cfg.seed)
+            self._adv_scale = self._adversary.delta_scale
+            if self._adversary.flips_labels:
+                data = self._adversary.corrupt_data(data,
+                                                    self._malicious_np)
+        # robust aggregation rule (repro.core.agg_rules): "mean" keeps
+        # the historical direct path (rule None); a stateful rule adds a
+        # device-resident (N,) state vector threaded through rounds
+        self._agg_rule = None
+        if fl_cfg.agg_rule not in (None, "mean"):
+            self._agg_rule = core.make_agg_rule(fl_cfg.agg_rule,
+                                                fl_cfg.agg_rule_params)
+        self._agg_stateful = (self._agg_rule is not None
+                              and self._agg_rule.stateful)
         self.data = data
         self.sim_cfg = sim_cfg
         self.fl_cfg = fl_cfg
@@ -492,6 +520,9 @@ class FleetEngine:
         self._dyn_cache = {}
         self._round_consts = {}
         self._cut_fns = {}                     # jitted round cut per trait
+        # the malicious mask is per-run-invariant: placed once, reused
+        self._malicious = None if self._adv_scale is None else \
+            self._put1(self._malicious_np)
 
     def _build_mesh(self, fl_cfg: FLConfig):
         if fl_cfg.mesh_shape is None:
@@ -571,12 +602,36 @@ class FleetEngine:
             self._server_steps[key] = core.make_server_round_step(
                 self._template, local_steps=self.sim_cfg.local_steps,
                 agg_impl=self.fl_cfg.agg_impl,
+                agg_rule=self.fl_cfg.agg_rule,
+                agg_rule_params=self.fl_cfg.agg_rule_params,
+                adversary_scale=self._adv_scale,
                 staleness_discount=self.fl_cfg.staleness_discount,
                 uses_cache=bool(uses_cache),
                 block_c=self.fl_cfg.agg_block_c,
                 block_d=self.fl_cfg.agg_block_d, mesh=self.mesh,
                 donate=self.donate, cohort_size=self.cohort)
         return self._server_steps[key]
+
+    # -- robust-aggregation state / adversary plumbing ----------------------
+
+    def _init_rule_state(self):
+        """Fresh per-run (N,) rule state (stateful rules only), placed
+        on device (sharded under the mesh) — the only fleet-state the
+        robust axis adds, threaded through the step like the caches."""
+        if not self._agg_stateful:
+            return None
+        return self._put1(self._agg_rule.init_state(
+            self.fl_cfg.num_clients))
+
+    def _step_extra(self, rule_state):
+        """Trailing args of the fused server step: the device-resident
+        malicious mask (adversary configured), then the rule state."""
+        extra = ()
+        if self._adv_scale is not None:
+            extra += (self._malicious,)
+        if self._agg_stateful:
+            extra += (rule_state,)
+        return extra
 
     def server_step_memory(self, uses_cache: bool = True) -> dict:
         """Allocation profile of the compiled fused server step (bytes).
@@ -607,17 +662,18 @@ class FleetEngine:
         mask = self._put1(np.zeros(rows, bool))
         steps_i = self._put1(np.zeros(rows, np.int32))
         ones = self._put1(np.ones(N, np.float32))
+        extra = self._step_extra(self._init_rule_state())
         # lower() only traces — nothing executes, nothing is donated
         if self.cohort is None:
             lowered = step.lower(self._template, caches, stacked, stacked,
                                  steps_i, mask, mask, mask, mask,
-                                 self._n_samples, ones, 0)
+                                 self._n_samples, ones, 0, *extra)
         else:
             idx = self._put1(np.arange(rows, dtype=np.int32))
             mask_n = self._put1(np.zeros(N, bool))
             lowered = step.lower(self._template, caches, stacked, stacked,
                                  steps_i, idx, mask_n, mask, mask, mask_n,
-                                 self._n_samples, ones, 0)
+                                 self._n_samples, ones, 0, *extra)
         ma = lowered.compile().memory_analysis()
         out = {"argument_bytes": int(ma.argument_size_in_bytes),
                "output_bytes": int(ma.output_size_in_bytes),
@@ -711,6 +767,11 @@ class FleetEngine:
             hist.per_client_acc = np.asarray(pc)
         for k, v in policy.history_extras(state).items():
             setattr(hist, k, v)
+        if self._agg_stateful:
+            # final per-client trust scores (stateful robust rules): the
+            # read-back happens once, at run end — rounds stay sync-free
+            setattr(hist, "trust",
+                    np.asarray(jax.device_get(self._last_rule_state)))
         hist.final_params = global_params
         # final device-resident fleet state (stays sharded under the mesh;
         # the seam for multi-round pipelining / warm restarts)
@@ -822,6 +883,7 @@ class FleetEngine:
                              np.int32)
         ones_w = self._put1(np.ones((fl_cfg.num_clients,), np.float32))
         server_step = self._server_step(policy.uses_cache)
+        rule_state = self._init_rule_state()
 
         for rnd in range(n_rounds):
             if time_budget is not None and cum_time >= time_budget:
@@ -873,11 +935,15 @@ class FleetEngine:
             # one jitted call, params never leave the device.
             extra_w = ones_w if plan.agg_weights is None else \
                 self._put1(np.asarray(plan.agg_weights, np.float32))
-            global_params, caches = server_step(
+            out = server_step(
                 global_params, caches, final, cache_p, cached_steps,
                 self._put1(selected), self._put1(fail),
                 self._put1(received), self._put1(resume),
-                n_samples, extra_w, rnd)
+                n_samples, extra_w, rnd, *self._step_extra(rule_state))
+            if self._agg_stateful:
+                global_params, caches, rule_state = out
+            else:
+                global_params, caches = out
 
             state = policy.observe(
                 state, plan,
@@ -890,6 +956,7 @@ class FleetEngine:
                 distribute & online, received, selected, duration,
                 cum_comm, cum_time, acc, progress)
 
+        self._last_rule_state = rule_state
         return state, global_params, caches
 
     # -- device-resident dynamics round loop (repro.fleet) ------------------
@@ -973,6 +1040,7 @@ class FleetEngine:
         cache_every, ones_w, full_steps = self._dyn_consts(
             fleet, policy.uses_cache)
         server_step = self._server_step(policy.uses_cache)
+        rule_state = self._init_rule_state()
         cut_fn = self._round_cut(policy.waits_for_stragglers)
         cohort_info = None if self.cohort is None \
             else (policy.name, self.cohort)
@@ -1023,9 +1091,14 @@ class FleetEngine:
                 t_cut, received, capped = cut_fn(times, plan.quorum,
                                                  success)
                 overflow = None
-                global_params, caches = server_step(
+                out = server_step(
                     global_params, caches, final, cache_p, cached_steps,
-                    sel_d, fail, received, res_d, n_samples, extra_w, rnd)
+                    sel_d, fail, received, res_d, n_samples, extra_w, rnd,
+                    *self._step_extra(rule_state))
+                if self._agg_stateful:
+                    global_params, caches, rule_state = out
+                else:
+                    global_params, caches = out
                 report = RoundReport(received=received, fail=fail,
                                      losses=losses, durations=times,
                                      duration=t_cut, rnd=rnd)
@@ -1043,10 +1116,14 @@ class FleetEngine:
                 # observability seam (tests / debugging): the last
                 # round's device cohort index, still sharded
                 self._last_cohort_idx = idx
-                global_params, caches = server_step(
+                out = server_step(
                     global_params, caches, final, cache_p, cached_steps,
                     idx, sel_d, fail, _received_x, res_d, n_samples,
-                    extra_w, rnd)
+                    extra_w, rnd, *self._step_extra(rule_state))
+                if self._agg_stateful:
+                    global_params, caches, rule_state = out
+                else:
+                    global_params, caches = out
                 report = RoundReport(received=received, fail=fail_n,
                                      losses=losses_n, durations=times_n,
                                      duration=t_cut, rnd=rnd)
@@ -1070,4 +1147,5 @@ class FleetEngine:
         # device-resident between runs, like the caches
         self._last_fleet_state = fstate
         self._last_draw = draw
+        self._last_rule_state = rule_state
         return state, global_params, caches

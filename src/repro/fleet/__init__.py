@@ -19,3 +19,6 @@ from repro.fleet.processes import (BernoulliHostProcess, BernoulliProcess,
 from repro.fleet.scenarios import (Scenario, apply_scenario,
                                    available_scenarios, get_scenario,
                                    register_scenario)
+from repro.fleet.adversary import (Adversary, available_adversaries,
+                                   get_adversary, make_adversary,
+                                   register_adversary)

@@ -15,9 +15,10 @@ policies::
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 from repro.fleet.api import get_dynamics
+from repro.fleet.adversary import get_adversary
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,12 +27,21 @@ class Scenario:
     dynamics: str                       # registered process name
     params: Tuple = ()                  # FLConfig.dynamics_params payload
     description: str = ""
+    adversary: Optional[str] = None     # registered attack model (or None)
+    adversary_params: Tuple = ()        # FLConfig.adversary_params payload
 
     def apply(self, fl_cfg):
-        """FLConfig with this scenario's dynamics installed."""
+        """FLConfig with this scenario's dynamics (and attack, if the
+        scenario carries one) installed.  Benign scenarios leave the
+        config's adversary untouched."""
         get_dynamics(self.dynamics)     # fail fast on unknown processes
-        return dataclasses.replace(fl_cfg, dynamics=self.dynamics,
-                                   dynamics_params=self.params)
+        changes = dict(dynamics=self.dynamics,
+                       dynamics_params=self.params)
+        if self.adversary is not None:
+            get_adversary(self.adversary)
+            changes.update(adversary=self.adversary,
+                           adversary_params=self.adversary_params)
+        return dataclasses.replace(fl_cfg, **changes)
 
 
 _REGISTRY: Dict[str, Scenario] = {}
@@ -105,3 +115,30 @@ register_scenario(Scenario(
     description="Replay of a week-long recorded availability matrix "
                 "(synthesized diurnal stand-in) — the evaluation regime "
                 "for production traces."))
+
+register_scenario(Scenario(
+    "sign-flip-10", "bernoulli",
+    adversary="sign_flip", adversary_params=(("malicious_frac", 0.1),),
+    description="Byzantine scaled reverse attack: 10% of the fleet "
+                "uploads u' = g - 4(u - g).  The weighted mean limps; "
+                "robust agg_rules shrug it off."))
+
+register_scenario(Scenario(
+    "sign-flip-20", "bernoulli",
+    adversary="sign_flip", adversary_params=(("malicious_frac", 0.2),),
+    description="Byzantine scaled reverse attack at 20% malicious "
+                "clients — the weighted-mean update cancels almost "
+                "exactly; the acceptance regime for robust rules."))
+
+register_scenario(Scenario(
+    "label-flip-20", "bernoulli",
+    adversary="label_flip", adversary_params=(("malicious_frac", 0.2),),
+    description="Data poisoning: 20% of clients train honestly on "
+                "flipped labels (y' = K-1-y)."))
+
+register_scenario(Scenario(
+    "grad-scale-10", "bernoulli",
+    adversary="grad_scale", adversary_params=(("malicious_frac", 0.1),),
+    description="Boosting attack: 10% of clients upload "
+                "u' = g + 10(u - g), dragging the mean far past the "
+                "honest step."))

@@ -1,0 +1,53 @@
+"""Numpy oracles for the robust aggregation rules.
+
+``geometric_median_ref`` is the smoothed Weiszfeld iteration of RFA
+(Pillutla et al., arXiv 1912.13445, Algorithm 1): starting from the
+weighted mean, each iteration reweights every client by
+``w_c / max(nu, ||u_c - z||)`` and recomputes the weighted average.  A
+*fixed* static iteration count keeps the device version a straight-line
+jit; the reference mirrors that exactly (no convergence test) so the
+device kernels can be compared iteration-for-iteration.
+
+``trimmed_mean_ref`` is the coordinate-wise trimmed mean over the valid
+(weight > 0) clients: per coordinate, the ``k = floor(trim * m)``
+smallest and largest valid values are discarded and the rest average
+with their aggregation weights.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+TINY = 1e-30
+
+
+def geometric_median_ref(updates: np.ndarray, weights: np.ndarray,
+                         iters: int = 6, eps: float = 1e-6) -> np.ndarray:
+    """Smoothed Weiszfeld over (C, D) rows -> (D,).  float64 accumulate."""
+    u = np.asarray(updates, np.float64)
+    w = np.asarray(weights, np.float64)
+    z = (w / max(w.sum(), TINY)) @ u
+    for _ in range(int(iters)):
+        dist = np.linalg.norm(u - z[None, :], axis=1)
+        beta = np.where(w > 0, w / np.maximum(dist, eps), 0.0)
+        z = (beta / max(beta.sum(), TINY)) @ u
+    return z
+
+
+def trimmed_mean_ref(updates: np.ndarray, weights: np.ndarray,
+                     trim: float = 0.2) -> np.ndarray:
+    """Coordinate-wise weighted trimmed mean over (C, D) rows -> (D,)."""
+    u = np.asarray(updates, np.float64)
+    w = np.asarray(weights, np.float64)
+    valid = w > 0
+    m = int(valid.sum())
+    if m == 0:
+        return np.zeros(u.shape[1])
+    k = min(int(np.floor(trim * m + 1e-6)), max((m - 1) // 2, 0))
+    out = np.zeros(u.shape[1])
+    for d in range(u.shape[1]):
+        col = u[valid, d]
+        wv = w[valid]
+        order = np.argsort(col, kind="stable")
+        keep = order[k:m - k]
+        out[d] = (wv[keep] @ col[keep]) / max(wv[keep].sum(), TINY)
+    return out

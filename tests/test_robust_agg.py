@@ -1,0 +1,451 @@
+"""Robust-aggregation subsystem: rules, kernels, adversaries, threading.
+
+Covers the ``agg_rule`` axis end to end:
+
+* numpy-reference parity of the Weiszfeld geometric median and the
+  coordinate-wise trimmed mean (xla and pallas_interpret impls);
+* rule semantics on seeded sweeps — permutation invariance, C=1
+  exactness, outlier robustness vs the weighted mean;
+* bitwise History parity of ``agg_rule="mean"`` with the direct
+  pre-rule aggregation path for every registered policy (the mean alias
+  rule goes through the generic ``AggRule.reduce`` machinery; the
+  default goes through the historical ``fed_aggregate_packed`` call);
+* the trust rule's per-client state: carried on device across rounds,
+  surfaced as ``hist.trust``, malicious clients down-weighted;
+* zero new per-round host transfers with robust rules + adversaries;
+* config validation naming the registered options;
+* the adversary layer: deterministic exact-count malicious masks, label
+  flipping, scenario presets.
+"""
+import dataclasses
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core.agg_rules import (MeanRule, available_agg_rules,
+                                  get_agg_rule, make_agg_rule,
+                                  register_agg_rule)
+from repro.data.synthetic import federated_classification
+from repro.fl import FleetEngine, SimConfig
+from repro.fl.api import available_policies
+from repro.fleet import (apply_scenario, available_adversaries,
+                         get_scenario, make_adversary)
+from repro.kernels.robust_agg import ops as R
+from repro.kernels.robust_agg.ref import (geometric_median_ref,
+                                          trimmed_mean_ref)
+
+N = 12
+
+
+@pytest.fixture(scope="module")
+def data():
+    return federated_classification(N, seed=0, n_per_client=24, dim=8,
+                                    num_classes=4)
+
+
+SIM = SimConfig(num_clients=N, rounds=4, seed=0, local_steps=2)
+FL = FLConfig(num_clients=N, clients_per_round=6, dynamics="bernoulli")
+
+
+def _updates(c=7, d=33, seed=0, w_zero=2):
+    rng = np.random.RandomState(seed)
+    u = rng.randn(c, d).astype(np.float32)
+    w = rng.rand(c).astype(np.float32) + 0.1
+    w[rng.permutation(c)[:w_zero]] = 0.0
+    return u, w
+
+
+# ---------------------------------------------------------------------------
+# Kernel / numpy-reference parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_geometric_median_matches_numpy_ref(impl):
+    for seed in range(4):
+        u, w = _updates(seed=seed)
+        got = np.asarray(R.geometric_median(u, w, impl=impl,
+                                            block_c=4, block_d=16))
+        want = geometric_median_ref(u, w)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_residual_norms_matches_dense(impl):
+    u, _ = _updates(c=9, d=50, seed=3)
+    z = u.mean(0)
+    got = np.asarray(R.residual_norms(u, z, impl=impl,
+                                      block_c=4, block_d=16))
+    want = np.linalg.norm(u - z[None], axis=1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_residual_norms_unknown_impl():
+    u, _ = _updates()
+    with pytest.raises(ValueError, match="unknown robust_agg impl"):
+        R.residual_norms(u, u[0], impl="cuda")
+
+
+def test_trimmed_mean_matches_numpy_ref():
+    for seed in range(4):
+        u, w = _updates(seed=seed)
+        got = np.asarray(R.trimmed_mean(u, w, trim=0.2))
+        want = trimmed_mean_ref(u, w, trim=0.2)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_masked_median():
+    x = np.array([5.0, 1.0, 9.0, 3.0, 7.0], np.float32)
+    valid = np.array([True, True, False, True, True])
+    # valid sorted: 1, 3, 5, 7 -> lower median 3
+    assert float(R.masked_median(x, valid)) == 3.0
+    assert float(R.masked_median(x, np.zeros(5, bool))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Rule semantics (seeded sweeps)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rule", ["geometric_median", "trimmed_mean",
+                                  "mean"])
+def test_rule_permutation_invariance(rule):
+    r = make_agg_rule(rule)
+    for seed in range(3):
+        u, w = _updates(seed=seed)
+        perm = np.random.RandomState(seed + 50).permutation(len(w))
+        g = np.zeros(u.shape[1], np.float32)
+        a = np.asarray(r.reduce(u, g, w))
+        b = np.asarray(r.reduce(u[perm], g, w[perm]))
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("rule", ["geometric_median", "trimmed_mean",
+                                  "mean"])
+def test_rule_single_client_exactness(rule):
+    """C=1 (one received client): every rule returns that update."""
+    r = make_agg_rule(rule)
+    u, _ = _updates(c=1, w_zero=0)
+    w = np.ones(1, np.float32)
+    got = np.asarray(r.reduce(u, np.zeros(u.shape[1], np.float32), w))
+    np.testing.assert_allclose(got, u[0], rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("rule", ["geometric_median", "trimmed_mean"])
+def test_rule_outlier_robustness_vs_mean(rule):
+    """One wild client moves the mean much more than the robust rules."""
+    r = make_agg_rule(rule)
+    mean = MeanRule()
+    for seed in range(3):
+        rng = np.random.RandomState(seed)
+        honest = rng.randn(9, 40).astype(np.float32) * 0.1 + 1.0
+        u = np.concatenate([honest, np.full((1, 40), -80.0, np.float32)])
+        w = np.ones(10, np.float32)
+        g = np.zeros(40, np.float32)
+        center = honest.mean(0)
+        err_robust = np.linalg.norm(np.asarray(r.reduce(u, g, w)) - center)
+        err_mean = np.linalg.norm(np.asarray(mean.reduce(u, g, w))
+                                  - center)
+        assert err_robust < 0.2 * err_mean, (rule, err_robust, err_mean)
+
+
+def test_trimmed_mean_drops_extremes_exactly():
+    """With unit weights the trimmed mean ignores the k most extreme
+    values per coordinate on both sides."""
+    u = np.array([[0.0], [1.0], [2.0], [3.0], [100.0]], np.float32)
+    w = np.ones(5, np.float32)
+    got = float(np.asarray(R.trimmed_mean(u, w, trim=0.2))[0])
+    assert got == pytest.approx(2.0)    # keeps {1, 2, 3}
+
+
+def test_geometric_median_zero_weight_rows_ignored():
+    u, w = _updates(c=8, w_zero=0, seed=9)
+    w[:3] = 0.0
+    u2 = np.array(u)
+    u2[:3] = 1e6                         # garbage in the dead rows
+    a = np.asarray(R.geometric_median(u, w))
+    b = np.asarray(R.geometric_median(u2, w))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Registry + config validation
+# ---------------------------------------------------------------------------
+
+def test_registry_contents():
+    names = available_agg_rules()
+    for expected in ("mean", "geometric_median", "trimmed_mean", "trust"):
+        assert expected in names
+    assert get_agg_rule("mean") is MeanRule
+    with pytest.raises(KeyError, match="geometric_median"):
+        get_agg_rule("krum")
+
+
+def test_register_agg_rule_rejects_non_rule():
+    with pytest.raises(TypeError, match="AggRule subclass"):
+        register_agg_rule("bogus")(dict)
+
+
+def test_stateless_rule_has_no_state_api():
+    r = MeanRule()
+    with pytest.raises(NotImplementedError, match="stateless"):
+        r.init_state(4)
+
+
+def test_flconfig_validates_agg_impl():
+    with pytest.raises(ValueError, match="pallas_interpret"):
+        FLConfig(num_clients=8, agg_impl="triton")
+
+
+def test_flconfig_validates_agg_rule():
+    with pytest.raises(ValueError, match="geometric_median"):
+        FLConfig(num_clients=8, agg_rule="median_of_means")
+
+
+def test_flconfig_validates_adversary():
+    with pytest.raises(ValueError, match="sign_flip"):
+        FLConfig(num_clients=8, adversary="backdoor")
+
+
+# ---------------------------------------------------------------------------
+# Mean stays bit-identical; the generic rule path reproduces it
+# ---------------------------------------------------------------------------
+
+def _hist_key(h):
+    return (tuple(h.acc), tuple(h.comm_mb), tuple(h.wall_clock),
+            tuple(h.received), tuple(h.selected))
+
+
+# registered once: the mean rule forced through the generic
+# ``AggRule.reduce`` machinery instead of the rule=None direct path
+# (a subclass — the decorator stamps ``cls.name``, and MeanRule itself
+# must keep its registered name)
+if "mean_alias" not in available_agg_rules():
+    @register_agg_rule("mean_alias")
+    class _MeanAlias(MeanRule):
+        pass
+
+
+@pytest.mark.parametrize("policy", available_policies())
+def test_mean_alias_bitwise_history_parity(data, policy):
+    """For every registered policy, the generic rule path under
+    ``agg_rule="mean_alias"`` reproduces the direct ``agg_rule="mean"``
+    History bit for bit — the refactor moved the default aggregation
+    without changing a single ULP."""
+    hists = []
+    for rule in ("mean", "mean_alias"):
+        fl = dataclasses.replace(FL, agg_rule=rule)
+        hists.append(FleetEngine(data, SIM, fl).run(
+            policy, diagnostics=False))
+    assert _hist_key(hists[0]) == _hist_key(hists[1]), policy
+
+
+@pytest.mark.parametrize("variant", ["host", "cohort", "depth2"])
+def test_mean_alias_parity_other_paths(data, variant):
+    """The bitwise mean parity holds on the legacy host loop, the
+    compact-cohort path and the pipelined loop too."""
+    changes = {"host": dict(dynamics="bernoulli_host"),
+               "cohort": dict(cohort_size=8),
+               "depth2": dict(pipeline_depth=2)}[variant]
+    hists = []
+    for rule in ("mean", "mean_alias"):
+        fl = dataclasses.replace(FL, agg_rule=rule, **changes)
+        hists.append(FleetEngine(data, SIM, fl).run(
+            "flude", diagnostics=False))
+    assert _hist_key(hists[0]) == _hist_key(hists[1]), variant
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: robust rules + adversaries
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rule", ["geometric_median", "trimmed_mean",
+                                  "trust"])
+@pytest.mark.parametrize("dyn", ["bernoulli", "bernoulli_host"])
+def test_robust_rules_run_under_attack(data, rule, dyn):
+    fl = dataclasses.replace(
+        FL, dynamics=dyn, agg_rule=rule, adversary="sign_flip",
+        adversary_params=(("malicious_frac", 0.25),))
+    h = FleetEngine(data, SIM, fl).run("flude", diagnostics=False)
+    assert len(h.acc) == SIM.rounds
+    assert np.isfinite(h.acc[-1])
+
+
+def test_robust_rule_cohort_and_pipeline(data):
+    """Robust rules ride the compact-cohort path at pipeline depth 2
+    (the stateful trust rule threads its (N,) state through the gathered
+    step and back)."""
+    fl = dataclasses.replace(
+        FL, agg_rule="trust", cohort_size=8, pipeline_depth=2,
+        adversary="sign_flip", adversary_params=(("malicious_frac", 0.25),))
+    h = FleetEngine(data, SIM, fl).run("flude", diagnostics=False)
+    assert hasattr(h, "trust") and h.trust.shape == (N,)
+
+
+def test_trust_downweights_malicious(data):
+    """After sign-flip rounds, the trust rule's learned per-client scores
+    are lower on the malicious slice than on the honest one.  The fleet
+    is dependable here (trust only updates on *received* uploads — a
+    malicious client that never uploads keeps its init score)."""
+    sim = dataclasses.replace(SIM, rounds=10,
+                              undep_means=(0.02, 0.02, 0.02))
+    fl = dataclasses.replace(
+        FL, clients_per_round=N, agg_rule="trust", adversary="sign_flip",
+        adversary_params=(("malicious_frac", 0.25),))
+    engine = FleetEngine(data, sim, fl)
+    h = engine.run("random", diagnostics=False)
+    mask = engine._malicious_np
+    assert mask.sum() == 3               # exact count at 25% of 12
+    assert h.trust[mask].mean() < h.trust[~mask].mean() - 0.1, h.trust
+
+
+def test_trust_state_fresh_per_run(data):
+    """Each ``run()`` starts from the rule's init state — back-to-back
+    runs produce identical trust trajectories."""
+    fl = dataclasses.replace(
+        FL, agg_rule="trust", adversary="sign_flip",
+        adversary_params=(("malicious_frac", 0.25),))
+    engine = FleetEngine(data, SIM, fl)
+    t1 = engine.run("random", diagnostics=False).trust
+    t2 = engine.run("random", diagnostics=False).trust
+    np.testing.assert_array_equal(t1, t2)
+
+
+def test_label_flip_changes_training_labels(data):
+    """Label-flip is data poisoning: the engine's training labels differ
+    from the clean set exactly on the malicious rows."""
+    fl = dataclasses.replace(
+        FL, adversary="label_flip",
+        adversary_params=(("malicious_frac", 0.25),))
+    engine = FleetEngine(data, SIM, fl)
+    mask = engine._malicious_np
+    y0 = np.asarray(data.y)
+    y1 = np.asarray(engine.data.y)
+    assert (y1[mask] != y0[mask]).any()
+    np.testing.assert_array_equal(y1[~mask], y0[~mask])
+    np.testing.assert_array_equal(y1[mask],
+                                  (data.num_classes - 1) - y0[mask])
+
+
+def test_server_step_memory_with_robust_rule(data):
+    fl = dataclasses.replace(
+        FL, agg_rule="trust", adversary="sign_flip")
+    m = FleetEngine(data, SIM, fl).server_step_memory()
+    assert m["peak_live_bytes"] > 0
+
+
+def test_robust_rules_add_no_per_round_transfers(data, monkeypatch):
+    """Acceptance: the robust axis adds zero per-round host→device
+    hand-offs — the ``place_per_client`` count stays round-count-
+    independent with a stateful rule + adversary configured."""
+    import repro.fl.engine as ENG
+    import repro.fl.policies as POL
+    import repro.fl.simulator as SIMM
+
+    counts = {"n": 0}
+    orig = SIMM.place_per_client
+
+    def counting(arr, mesh=None):
+        counts["n"] += 1
+        return orig(arr, mesh)
+
+    for mod in (ENG, POL, SIMM):
+        monkeypatch.setattr(mod, "place_per_client", counting)
+
+    fl = dataclasses.replace(
+        FL, agg_rule="trust", adversary="sign_flip",
+        adversary_params=(("malicious_frac", 0.25),))
+    engine = FleetEngine(data, SIM, fl)
+    engine.run("flude", rounds=1, diagnostics=False)   # compile + place
+    per_run = []
+    for rounds in (1, 4):
+        counts["n"] = 0
+        engine.run("flude", rounds=rounds, diagnostics=False)
+        per_run.append(counts["n"])
+    assert per_run[0] == per_run[1], per_run
+
+
+# ---------------------------------------------------------------------------
+# Adversary layer
+# ---------------------------------------------------------------------------
+
+def test_malicious_mask_exact_and_deterministic():
+    adv = make_adversary("sign_flip", (("malicious_frac", 0.2),))
+    m1 = adv.malicious_mask(50, seed=3)
+    m2 = adv.malicious_mask(50, seed=3)
+    assert m1.sum() == 10
+    np.testing.assert_array_equal(m1, m2)
+    assert adv.malicious_mask(50, seed=4).sum() == 10
+
+
+def test_adversary_registry_and_validation():
+    assert set(available_adversaries()) >= {"sign_flip", "grad_scale",
+                                            "label_flip"}
+    assert make_adversary("sign_flip").delta_scale == -4.0
+    assert make_adversary("grad_scale").delta_scale == 10.0
+    assert make_adversary("label_flip").flips_labels
+    with pytest.raises(ValueError, match="malicious_frac"):
+        make_adversary("sign_flip", (("malicious_frac", 1.5),))
+    with pytest.raises(ValueError, match="scale"):
+        make_adversary("sign_flip", (("scale", -1.0),))
+
+
+@pytest.mark.parametrize("name", ["sign-flip-10", "sign-flip-20",
+                                  "label-flip-20", "grad-scale-10"])
+def test_attack_scenarios_apply(name):
+    sc = get_scenario(name)
+    fl = apply_scenario(FL, name)
+    assert fl.adversary == sc.adversary
+    assert fl.adversary_params == sc.adversary_params
+    # benign scenarios leave the adversary untouched
+    attacked = apply_scenario(fl, "churn")
+    assert attacked.adversary == sc.adversary
+
+
+# ---------------------------------------------------------------------------
+# Sharded parity (8 forced host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses, json
+import numpy as np
+from repro.configs.base import FLConfig
+from repro.data.synthetic import federated_classification
+from repro.fl import FleetEngine, SimConfig
+
+n = 16
+data = federated_classification(n, seed=0, n_per_client=24, dim=8,
+                                num_classes=4)
+sim = SimConfig(num_clients=n, rounds=3, seed=0, local_steps=2)
+out = {}
+for rule in ("geometric_median", "trust"):
+    accs = {}
+    for mesh in (None, (8,)):
+        fl = FLConfig(num_clients=n, clients_per_round=8,
+                      dynamics="bernoulli", mesh_shape=mesh,
+                      agg_rule=rule, adversary="sign_flip",
+                      adversary_params=(("malicious_frac", 0.25),))
+        h = FleetEngine(data, sim, fl).run("flude", diagnostics=False)
+        accs["single" if mesh is None else "mesh8"] = h.acc
+    out[rule] = accs
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_robust_rules_match_single_device():
+    """geometric_median and the stateful trust rule agree between the
+    single-device path and the 8-way client mesh (shard_map psum path) to
+    float tolerance."""
+    env = dict(__import__("os").environ)
+    r = subprocess.run([sys.executable, "-c", _MESH_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stderr[-4000:]
+    import json
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    for rule, accs in out.items():
+        np.testing.assert_allclose(accs["single"], accs["mesh8"],
+                                   rtol=0, atol=5e-2, err_msg=rule)

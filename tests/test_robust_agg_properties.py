@@ -1,0 +1,93 @@
+"""Hypothesis property tests for the robust aggregation rules.
+
+The deterministic seeded sweeps in tests/test_robust_agg.py cover the
+same invariants without the hypothesis dependency; this module widens
+the search space (randomized client/parameter counts, weight sparsity,
+adversarial outlier magnitudes) where hypothesis is available.
+
+Properties:
+
+* numpy-reference parity of the geometric median across random shapes
+  and weight patterns (xla impl; the pallas_interpret parity on the same
+  oracle lives in the seeded sweep);
+* permutation invariance of every stateless rule;
+* C=1 exactness: with one received client the rules return its update;
+* outlier robustness: a bounded-fraction adversarial cluster moves the
+  geometric median strictly less than it moves the weighted mean.
+"""
+import numpy as np
+import pytest
+
+from repro.core.agg_rules import make_agg_rule
+from repro.kernels.robust_agg import ops as R
+from repro.kernels.robust_agg.ref import geometric_median_ref
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+settings.register_profile("robust_agg", max_examples=40, deadline=None)
+settings.load_profile("robust_agg")
+
+
+def _problem(c, d, seed, zero_frac):
+    rng = np.random.RandomState(seed)
+    u = rng.randn(c, d).astype(np.float32)
+    w = rng.rand(c).astype(np.float32) + 0.05
+    nz = int(zero_frac * c)
+    if nz >= c:
+        nz = c - 1
+    w[rng.permutation(c)[:nz]] = 0.0
+    return u, w
+
+
+@given(c=st.integers(2, 24), d=st.integers(1, 80),
+       seed=st.integers(0, 2 ** 16), zero_frac=st.floats(0.0, 0.8))
+def test_gm_matches_ref(c, d, seed, zero_frac):
+    u, w = _problem(c, d, seed, zero_frac)
+    got = np.asarray(R.geometric_median(u, w))
+    want = geometric_median_ref(u, w)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-5)
+
+
+@given(rule=st.sampled_from(["mean", "geometric_median", "trimmed_mean"]),
+       c=st.integers(2, 16), d=st.integers(1, 40),
+       seed=st.integers(0, 2 ** 16))
+def test_rule_permutation_invariance(rule, c, d, seed):
+    u, w = _problem(c, d, seed, 0.3)
+    perm = np.random.RandomState(seed ^ 0xBEEF).permutation(c)
+    r = make_agg_rule(rule)
+    g = np.zeros(d, np.float32)
+    a = np.asarray(r.reduce(u, g, w))
+    b = np.asarray(r.reduce(u[perm], g, w[perm]))
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-6)
+
+
+@given(rule=st.sampled_from(["mean", "geometric_median", "trimmed_mean"]),
+       d=st.integers(1, 60), seed=st.integers(0, 2 ** 16))
+def test_rule_single_client_exact(rule, d, seed):
+    rng = np.random.RandomState(seed)
+    u = rng.randn(1, d).astype(np.float32)
+    w = np.ones(1, np.float32)
+    r = make_agg_rule(rule)
+    got = np.asarray(r.reduce(u, np.zeros(d, np.float32), w))
+    np.testing.assert_allclose(got, u[0], rtol=1e-5, atol=1e-6)
+
+
+@given(honest=st.integers(6, 20), bad=st.integers(1, 2),
+       d=st.integers(2, 40), seed=st.integers(0, 2 ** 16),
+       mag=st.floats(10.0, 1e4))
+def test_gm_more_robust_than_mean(honest, bad, d, seed, mag):
+    """An adversarial cluster (<~25% of the weight) at magnitude ``mag``
+    displaces the geometric median strictly less than the mean."""
+    rng = np.random.RandomState(seed)
+    hu = rng.randn(honest, d).astype(np.float32) * 0.2 + 1.0
+    bu = np.full((bad, d), -mag, np.float32)
+    u = np.concatenate([hu, bu])
+    w = np.ones(honest + bad, np.float32)
+    center = hu.mean(0)
+    g = np.zeros(d, np.float32)
+    gm = np.asarray(make_agg_rule("geometric_median").reduce(u, g, w))
+    mean = np.asarray(make_agg_rule("mean").reduce(u, g, w))
+    err_gm = np.linalg.norm(gm - center)
+    err_mean = np.linalg.norm(mean - center)
+    assert err_gm < err_mean
