@@ -49,6 +49,10 @@ class FludeNoSelector(FludePolicy):
         self._abl_plan_jit = _ablated_plan_jit(fl_cfg)
 
     def plan(self, state, obs, rng):
+        # the inherited observe() parks the previous round's receipts for
+        # the next plan to fold in — apply them before planning, like the
+        # base policy's fused update+plan dispatch does
+        st = self._flush(state)
         N = self.fl_cfg.num_clients
         rs = np.random.RandomState(1000 + obs.rnd)
         sel = np.zeros(N, bool)
@@ -59,11 +63,11 @@ class FludeNoSelector(FludePolicy):
         # the FludePlan stored in state.last must describe THIS selection —
         # the inherited observe() books Beta-belief successes/failures
         # against state.last.selected, so it has to match the executed plan
-        p = self._abl_plan_jit(state.core, obs.caches, jnp.asarray(sel))
+        p = self._abl_plan_jit(st, obs.caches, jnp.asarray(sel))
         quorum = min(float(p.quorum), float(sel.sum()))
         plan = RoundPlan.create(sel, np.asarray(p.distribute),
                                 np.asarray(p.resume), quorum)
-        return FludePolicyState(state.core, p), plan
+        return FludePolicyState(st, p, None), plan
 
 
 def run():

@@ -562,6 +562,184 @@ def run_cohort():
     return record
 
 
+OFFLOAD_XS = (128, 512)
+OFFLOAD_MODES = (None, "host", "discard")
+OFFLOAD_ROUNDS = COHORT_ROUNDS
+OFFLOAD_REPS = COHORT_REPS
+OFFLOAD_STALENESS = 8          # discard bound, in rounds
+STATS_ROUNDS = 3               # transfer-counter probe after timing
+
+
+def run_offload():
+    """C3 cache residency: resident (N, D) pytree vs the host-offloaded
+    store ("host") vs the staleness-bounded store ("discard"),
+    rounds/sec at N=4096, X in {128, 512}.
+
+    The three residency modes of one cohort width run back-to-back
+    within each rep, so the host/resident ratio is paired against the
+    same machine-load window; each point keeps its best rep.  After
+    timing, each offload engine reruns a short probe with the transfer
+    counters reset to record the per-round async-copy footprint (the
+    streaming contract: zero synchronous round-blocking copies).  The
+    N=1M smoke reruns the fleet-state scaling check with the *default*
+    full-size model (hidden=128, depth=2) — resident C3 state for that
+    model is ~70 GB at N=1M, so the host store is what makes the run
+    fit; the recorded residency split shows device cache bytes tracking
+    X, not N.  Merged into BENCH_engine.json under "offload"."""
+    from repro.core import cache_store as CS
+    n = N_MESH
+    sim, fl, data = _setup(n)
+    sim = dataclasses.replace(
+        sim, rounds=WARMUP + OFFLOAD_ROUNDS * OFFLOAD_REPS)
+
+    engines = {}
+    for x in (x for x in OFFLOAD_XS if x <= n):
+        for mode in OFFLOAD_MODES:
+            fl2 = dataclasses.replace(
+                fl, dynamics="bernoulli", cohort_size=x,
+                clients_per_round=min(x, fl.clients_per_round),
+                donate_buffers=True, cache_offload=mode,
+                cache_staleness_bound=(
+                    OFFLOAD_STALENESS if mode == "discard"
+                    else fl.cache_staleness_bound))
+            engine = FleetEngine(data, sim, fl2, fleet=Fleet(sim))
+            engine.run(POLICY, rounds=WARMUP, diagnostics=False)  # warmup
+            engines[f"x{x}_{mode or 'resident'}"] = engine
+
+    reps = {k: [] for k in engines}
+    for _ in range(OFFLOAD_REPS):
+        for k, engine in engines.items():   # modes of one X stay paired
+            t0 = time.time()
+            engine.run(POLICY, rounds=OFFLOAD_ROUNDS,
+                       eval_every=10 * OFFLOAD_ROUNDS, diagnostics=False)
+            reps[k].append(OFFLOAD_ROUNDS / (time.time() - t0))
+    # oversample the acceptance-critical X=512 trio: the resident point
+    # is compared against the prior cohort record's best-of-15 rate (5
+    # reps + 10 pair-extra), so a best-of-5 here would understate it by
+    # pure rep lottery on the shared container
+    pair_keys = tuple(k for k in ("x512_resident", "x512_host",
+                                  "x512_discard") if k in engines)
+    for _ in range(PAIR_EXTRA_REPS if pair_keys else 0):
+        for k in pair_keys:
+            engine = engines[k]
+            t0 = time.time()
+            engine.run(POLICY, rounds=OFFLOAD_ROUNDS,
+                       eval_every=10 * OFFLOAD_ROUNDS, diagnostics=False)
+            reps[k].append(OFFLOAD_ROUNDS / (time.time() - t0))
+
+    sweep = {}
+    for k, engine in engines.items():
+        point = {"n": n, "cohort_size": engine.fl_cfg.cohort_size,
+                 "cache_offload": engine.fl_cfg.cache_offload,
+                 "rounds_per_sec": max(reps[k]),
+                 "reps_rounds_per_sec": reps[k]}
+        if engine.fl_cfg.cache_offload is not None:
+            CS.STATS.reset()
+            engine.run(POLICY, rounds=STATS_ROUNDS,
+                       eval_every=10 * STATS_ROUNDS, diagnostics=False)
+            point["transfer_stats_rounds"] = STATS_ROUNDS
+            point["transfer_stats"] = CS.STATS.snapshot()
+        mem = engine.server_step_memory()
+        point["cache_device_bytes"] = mem["cache_device_bytes"]
+        point["cache_host_bytes"] = mem["cache_host_bytes"]
+        sweep[k] = point
+        emit(f"engine_offload_{k}", 1e6 / point["rounds_per_sec"],
+             f"n={n};rps={point['rounds_per_sec']:.3f};"
+             f"cache_dev={mem['cache_device_bytes']}")
+    del engines
+
+    # paired host/resident + discard/resident ratios per cohort width
+    # (rep i of each mode ran back-to-back, so the per-rep ratio
+    # differences out that weather window's co-tenant load)
+    ratios = {}
+    for x in OFFLOAD_XS:
+        if f"x{x}_resident" not in sweep:
+            continue
+        for mode in ("host", "discard"):
+            paired = sorted(a / b for a, b in
+                            zip(reps[f"x{x}_{mode}"],
+                                reps[f"x{x}_resident"]))
+            ratios[f"x{x}_{mode}_over_resident"] = {
+                "paired_median": paired[len(paired) // 2],
+                "paired_ratios": paired,
+                "best_rates": sweep[f"x{x}_{mode}"]["rounds_per_sec"]
+                / sweep[f"x{x}_resident"]["rounds_per_sec"]}
+
+    # ---- N=1M smoke, full-size default model: the host store carries
+    # the fleet's C3 params, the device holds (X, D) blocks + (N,)
+    # metadata only
+    smoke_sim = SimConfig(num_clients=N_SMOKE,
+                          rounds=WARMUP + SMOKE_ROUNDS,
+                          local_steps=2, batch_size=2, seed=7)
+    smoke_fl = FLConfig(num_clients=N_SMOKE, clients_per_round=X_SMOKE,
+                        cohort_size=X_SMOKE, dynamics="bernoulli",
+                        donate_buffers=True, cache_offload="host")
+    engine = FleetEngine(_vec_classification(N_SMOKE, seed=8), smoke_sim,
+                         smoke_fl, fleet=Fleet(smoke_sim))
+    engine.run(POLICY, rounds=WARMUP, diagnostics=False)      # jit warmup
+    CS.STATS.reset()
+    t0 = time.time()
+    engine.run(POLICY, rounds=SMOKE_ROUNDS, eval_every=10 * SMOKE_ROUNDS,
+               diagnostics=False)
+    dt = time.time() - t0
+    mem = engine.server_step_memory()
+    live = int(sum(a.nbytes for a in jax.live_arrays()))
+    row = engine.cache_store.row_bytes
+    smoke = {"n": N_SMOKE, "cohort_size": X_SMOKE,
+             "rounds_run": SMOKE_ROUNDS,
+             "rounds_per_sec": SMOKE_ROUNDS / dt,
+             "model_hidden": smoke_sim.model_hidden,
+             "model_depth": smoke_sim.model_depth,
+             "cache_offload": "host", "cache_row_bytes": row,
+             "resident_equivalent_cache_bytes": N_SMOKE * row,
+             "cache_device_bytes": mem["cache_device_bytes"],
+             "cache_host_bytes": mem["cache_host_bytes"],
+             "server_step_peak_live_bytes": mem["peak_live_bytes"],
+             "live_device_bytes": live,
+             "transfer_stats": CS.STATS.snapshot()}
+    emit("engine_offload_smoke", dt * 1e6 / SMOKE_ROUNDS,
+         f"n={N_SMOKE};x={X_SMOKE};rps={SMOKE_ROUNDS / dt:.3f};"
+         f"cache_dev={mem['cache_device_bytes']};"
+         f"cache_host={mem['cache_host_bytes']};live_bytes={live}")
+
+    path = os.path.join(RESULTS, "BENCH_engine.json")
+    record = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            record = json.load(f)
+    record["offload"] = {
+        "policy": POLICY, "n": n, "rounds": OFFLOAD_ROUNDS,
+        "reps": OFFLOAD_REPS, "dynamics": "bernoulli",
+        "donate_buffers": True, "discard_staleness_bound":
+            OFFLOAD_STALENESS,
+        "note": "cache_offload='host' keeps only the (X, D) cohort "
+                "cache slots on device and streams written slots to a "
+                "sparse host store (async dispatch, double-buffered "
+                "drain — transfer_stats.sync_copies counts the "
+                "round-blocking copies the protocol never makes); "
+                "'discard' additionally drops caches older than the "
+                "staleness bound.  smoke: N=1M with the default "
+                "full-size model — the resident-equivalent (N, D) "
+                "cache pytree would be resident_equivalent_cache_bytes "
+                "(~70 GB), the device footprint stays O(X*D)",
+        "sweep": sweep, "ratios": ratios, "smoke_full_model": smoke}
+    prior = record.get("cohort", {}).get("sweep", {}).get("512")
+    if prior and "x512_resident" in sweep:
+        # resident-path regression guard: same config as the cohort
+        # sweep's X=512 point, recorded before the offload seam existed
+        record["offload"]["resident_x512_over_prior_cohort_x512"] = \
+            sweep["x512_resident"]["rounds_per_sec"] \
+            / prior["rounds_per_sec"]
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    if ratios:
+        emit("engine_offload_summary", 0.0,
+             ";".join(f"{k}={v['paired_median']:.3f}x"
+                      for k, v in ratios.items()), record=None)
+    return record
+
+
 DYN_PATHS = (("host_rng", "bernoulli_host"),
              ("device_bernoulli", "bernoulli"),
              ("device_markov", "markov"))
@@ -622,5 +800,7 @@ if __name__ == "__main__":
         run_pipeline()
     elif "--cohort" in sys.argv[1:]:
         run_cohort()
+    elif "--offload" in sys.argv[1:]:
+        run_offload()
     else:
         run()

@@ -53,6 +53,10 @@ def main() -> None:
         # compact-cohort round path (X sweep + N=1M fleet-state smoke)
         "engine_cohort": types.SimpleNamespace(
             run=bench_engine.run_cohort),
+        # C3 cache residency (resident vs host vs discard + full-model
+        # N=1M smoke)
+        "engine_offload": types.SimpleNamespace(
+            run=bench_engine.run_offload),
     }
     print("name,us_per_call,derived")
     failed = []

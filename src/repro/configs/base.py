@@ -292,6 +292,23 @@ class FLConfig:
     #   read back with the deferred ledger, i.e. up to depth-1 rounds
     #   late).  Requires a device dynamics process (not bernoulli_host)
     #   and, under a mesh, ``cohort_size % mesh_shape[0] == 0``.
+    cache_offload: Optional[str] = None
+    # ^ C3 cache residency (requires cohort_size).  None keeps today's
+    #   device-resident (N, D) cache pytree.  "host" keeps only the (N,)
+    #   cache *metadata* (progress, round stamp — what planning reads)
+    #   on device plus the current cohort's (X, D) slot block; written
+    #   slots stream back to a sparse host store with async dispatch /
+    #   double buffering (repro.core.cache_store) and the next cohort's
+    #   slots are prefetched as soon as its selection mask is known —
+    #   device cache memory scales with X, trajectories stay
+    #   bit-identical to the resident path.  "discard" additionally
+    #   drops rows unselected for more than cache_staleness_bound
+    #   rounds (device metadata expiry + host-store prune) — a legal
+    #   memory/accuracy knob, since the paper's cache is best-effort.
+    cache_staleness_bound: int = 32
+    # ^ "discard" mode: rounds a cache row survives without a rewrite
+    #   before it is dropped (host row pruned, device metadata reset
+    #   before planning).  Ignored by the other offload modes.
     # fleet dynamics (repro.fleet): availability process + scenario params
     dynamics: str = "bernoulli_host"
     # ^ registered process name.  "bernoulli_host" is the seed simulator's
@@ -335,6 +352,21 @@ class FLConfig:
                     f"FLConfig.adversary must be a registered adversary "
                     f"({', '.join(available_adversaries())}) or None, "
                     f"got {self.adversary!r}")
+        if self.cache_offload not in (None, "host", "discard"):
+            raise ValueError(
+                f"FLConfig.cache_offload must be None, 'host' or "
+                f"'discard', got {self.cache_offload!r}")
+        if self.cache_offload is not None and self.cohort_size is None:
+            raise ValueError(
+                f"FLConfig.cache_offload={self.cache_offload!r} requires "
+                f"cohort_size — only the compact cohort path knows which "
+                f"(X, D) cache slots a round touches; set cohort_size or "
+                f"keep cache_offload=None for the resident pytree")
+        b = self.cache_staleness_bound
+        if not isinstance(b, int) or isinstance(b, bool) or b < 1:
+            raise ValueError(
+                f"FLConfig.cache_staleness_bound must be a positive int, "
+                f"got {b!r}")
         x = self.cohort_size
         if x is None:
             return

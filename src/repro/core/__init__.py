@@ -6,10 +6,12 @@ from repro.core.selection import (SelectionResult, decay_epsilon,
                                   freq_threshold, priority,
                                   select_participants)
 from repro.core.caching import (ClientCaches, adaptive_cache_interval,
-                                clear_cache, gather_caches, has_cache,
-                                init_caches, reset_caches, resume_params,
-                                scatter_clear_cache, scatter_write_cache,
-                                staleness, write_cache)
+                                clear_cache, expire_caches, gather_caches,
+                                has_cache, init_caches, reset_caches,
+                                resume_params, scatter_clear_cache,
+                                scatter_write_cache, staleness, write_cache)
+from repro.core.cache_store import (CohortCacheStream, HostCacheStore,
+                                    TransferStats)
 from repro.core.distribution import (DistributionPlan, DistributorState,
                                      init_distributor, plan_distribution,
                                      predicted_comm_cost)

@@ -137,6 +137,26 @@ def scatter_clear_cache(caches: ClientCaches, idx: jax.Array,
         caches.round_stamp.at[target].set(-1, mode="drop"))
 
 
+def expire_caches(caches: ClientCaches, current_round,
+                  staleness_bound: int) -> ClientCaches:
+    """Drop cache slots staler than ``staleness_bound`` rounds.
+
+    The device half of ``FLConfig.cache_offload="discard"``: metadata of
+    rows whose stamp is more than ``staleness_bound`` rounds old resets
+    to the empty slot (progress 0, stamp -1) *before* planning reads it,
+    so the planner consistently sees the slot as absent and never
+    schedules a resume the host store has pruned.  Params leaves pass
+    through untouched — in offload mode there are none on device, and
+    an unreachable resident row is dead weight either way.
+    """
+    stale = (jnp.asarray(current_round, jnp.int32) - caches.round_stamp) \
+        > staleness_bound
+    return ClientCaches(
+        caches.params,
+        jnp.where(stale, 0.0, caches.progress),
+        jnp.where(stale, -1, caches.round_stamp))
+
+
 def staleness(caches: ClientCaches, current_round) -> jax.Array:
     """Rounds elapsed since the cache was written (∞-ish if empty)."""
     empty = caches.round_stamp < 0

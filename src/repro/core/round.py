@@ -128,7 +128,8 @@ def make_server_round_step(template_params, *, local_steps: int,
                            uses_cache: bool = True,
                            block_c: int = 8, block_d: int = 2048,
                            mesh=None, donate: bool = False,
-                           cohort_size: Optional[int] = None):
+                           cohort_size: Optional[int] = None,
+                           cache_offload: Optional[str] = None):
     """Build the fused per-round server step (one jit, zero host syncs).
 
     The returned callable runs everything the server does between "uploads
@@ -181,6 +182,17 @@ def make_server_round_step(template_params, *, local_steps: int,
     state) and transforms the marked clients' uploads inside the jit:
     ``u' = g + adversary_scale * (u - g)`` — the model-poisoning channel
     of ``repro.fleet.adversary``.  Benign runs compile the attack out.
+
+    ``cache_offload`` (cohort variant only): the host-offloaded cache
+    path.  ``caches`` then carries *metadata only* (params is an empty
+    pytree — the (N, D) slots live in ``repro.core.cache_store``), the
+    ``cache_params`` argument is dropped (the engine streams the
+    trainer's (X, ...) cache block to host itself) and the step returns
+    ``(new_global, new_caches_meta, write, base_round[, rule_state])``
+    — ``write``/``base_round`` are the (X,) cache-write mask and round
+    stamps the engine's write-back stages to the host store.  The
+    weight math, aggregation and metadata scatters are the exact ops of
+    the resident cohort step, so trajectories are bit-identical.
     """
     layout = AGG.pack_layout(template_params)
     donate_argnums = (0, 1) if donate else ()
@@ -239,6 +251,94 @@ def make_server_round_step(template_params, *, local_steps: int,
         malicious = extra[0] if has_adv else None
         rule_state = extra[-1] if stateful else None
         return malicious, rule_state
+
+    if cache_offload is not None and cohort_size is None:
+        raise ValueError("cache_offload requires the cohort server-step "
+                         "variant (pass cohort_size)")
+
+    if cohort_size is not None and cache_offload is not None:
+        @functools.partial(jax.jit, donate_argnums=donate_argnums)
+        def server_round_step_cohort_offload(global_params,
+                                             caches: C.ClientCaches,
+                                             final_params, cached_steps,
+                                             idx, selected, fail,
+                                             received, resume, n_samples,
+                                             extra_weights, rnd, *extra):
+            """-> (new_global, new_caches_meta, write, base_round
+            [, new_rule_state]).
+
+            The host-offload twin of ``server_round_step_cohort``:
+            ``caches`` is the metadata-only ClientCaches (empty params
+            pytree), and instead of scattering the cohort's cache params
+            back into a resident (N, D) pytree the step returns the (X,)
+            write mask and base-round stamps — the engine stages the
+            trainer's cache block to the host store with them.  Every
+            weight / aggregation / metadata op is identical to the
+            resident cohort step.
+            """
+            from repro.sharding import partitioning as SP
+
+            malicious, rule_state = split_extra(extra)
+            rnd = jnp.asarray(rnd, jnp.int32)
+
+            def take(a, fill):
+                return jnp.take(a, idx, axis=0, mode="fill",
+                                fill_value=fill)
+
+            selected = take(selected, False)              # (X,)
+            resume = take(resume, False)
+            stamp = take(caches.round_stamp, -1)          # (X,)
+            base_stale = jnp.where(resume & (stamp >= 0),
+                                   jnp.maximum(rnd - stamp, 0),
+                                   0).astype(jnp.float32)
+            w = AGG.aggregation_weights(
+                received, n_samples=take(n_samples, 0.0),
+                staleness=base_stale,
+                staleness_discount=staleness_discount) \
+                * take(extra_weights, 0.0)
+            w = SP.cohort_constraint(w, mesh, cohort_size)
+            if has_adv:
+                mal_x = SP.cohort_constraint(take(malicious, False),
+                                             mesh, cohort_size)
+                final_params = poison(final_params, global_params, mal_x)
+            state_x = None
+            if stateful:
+                state_x = SP.cohort_constraint(take(rule_state, 0.0),
+                                               mesh, cohort_size)
+            new_global, state_x = aggregate(global_params, final_params,
+                                            w, state_x)
+            if stateful:
+                rule_state = rule_state.at[idx].set(state_x, mode="drop")
+                rule_state = SP.cohort_scatter_constraint(
+                    rule_state, mesh, rule_state.shape[0])
+            if uses_cache:
+                prior_steps = jnp.round(
+                    take(caches.progress, 0.0) * local_steps
+                ).astype(jnp.int32)
+                total_cached = jnp.where(resume, prior_steps, 0) \
+                    + cached_steps
+                write = selected & fail & (total_cached > 0)
+                base_round = jnp.where(resume & (stamp >= 0), stamp, rnd)
+                # metadata-only scatters: the params pytree is empty, so
+                # the same predicated writes the resident step runs
+                # touch only progress / round_stamp
+                caches = C.scatter_write_cache(
+                    caches, idx, write, caches.params,
+                    (total_cached / max(local_steps, 1)
+                     ).astype(jnp.float32), base_round)
+                caches = C.scatter_clear_cache(caches, idx, received)
+                caches = SP.cohort_scatter_constraint(
+                    caches, mesh, caches.progress.shape[0])
+            else:
+                write = jnp.zeros((cohort_size,), bool)
+                base_round = jnp.full((cohort_size,), -1, jnp.int32)
+            write, base_round = SP.cohort_constraint(
+                (write, base_round), mesh, cohort_size)
+            if stateful:
+                return new_global, caches, write, base_round, rule_state
+            return new_global, caches, write, base_round
+
+        return server_round_step_cohort_offload
 
     if cohort_size is not None:
         @functools.partial(jax.jit, donate_argnums=donate_argnums)
@@ -390,7 +490,8 @@ def host_round_cut(times, quorum, round_deadline: float,
 
 def make_round_cut(num_clients: int, round_deadline: float,
                    waits_for_stragglers: bool, mesh=None,
-                   scatter_num_clients: Optional[int] = None):
+                   scatter_num_clients: Optional[int] = None,
+                   with_counts: bool = False):
     """Build the jitted device-resident round cut (lines 13–16).
 
     Semantically identical to :func:`host_round_cut` — and bit-identical
@@ -429,6 +530,15 @@ def make_round_cut(num_clients: int, round_deadline: float,
     itself is exact: every finite finish time belongs to a selected
     client, selected ⊆ cohort, so the order statistics over the X rows
     equal those over the full N — bit-identical even under a mesh.
+
+    ``with_counts``: fuse the round's three History ledger reductions
+    into the cut dispatch.  The callable then takes three trailing (N,)
+    masks ``(online, distribute, selected)`` and appends the device
+    scalars ``(received_count, download_count, selected_count)`` to its
+    outputs (``download_count`` is ``(distribute & online).sum()`` —
+    ``FleetDraw.download_mask`` inlined).  This removes the separate
+    per-round ledger-counts dispatch: everything the deferred History
+    needs leaves the cut as O(1) replicated device scalars.
     """
     deadline = float(round_deadline)
     # nearest float32 (what the old received_fn's weak f64->f32 cast did)
@@ -455,9 +565,18 @@ def make_round_cut(num_clients: int, round_deadline: float,
         received = success & (times <= t_cut)
         return t_cut, received, capped
 
+    def ledger_counts(received_rows, online, distribute, selected):
+        """The three (N,)→scalar History reductions, fused into the cut
+        (``received_rows`` may be the (X,) cohort block — sentinel rows
+        are never received, so its sum equals the fleet sum)."""
+        from repro.sharding import partitioning as SP
+        counts = (received_rows.sum(), (distribute & online).sum(),
+                  selected.sum())
+        return SP.replicated_constraint(counts, mesh)
+
     if scatter_num_clients is not None:
         @jax.jit
-        def round_cut_cohort(times, quorum, success, idx):
+        def round_cut_cohort(times, quorum, success, idx, *masks):
             from repro.sharding import partitioning as SP
             t_cut, received, capped = cut_core(times, quorum, success)
             received_full = jnp.zeros((scatter_num_clients,), bool) \
@@ -469,18 +588,24 @@ def make_round_cut(num_clients: int, round_deadline: float,
                     received_full, mesh, scatter_num_clients)
                 t_cut, capped = SP.replicated_constraint(
                     (t_cut, capped), mesh)
+            if with_counts:
+                return (t_cut, received, received_full, capped) \
+                    + ledger_counts(received, *masks)
             return t_cut, received, received_full, capped
 
         return round_cut_cohort
 
     @jax.jit
-    def round_cut(times, quorum, success):
+    def round_cut(times, quorum, success, *masks):
         t_cut, received, capped = cut_core(times, quorum, success)
         if mesh is not None:
             from repro.sharding import partitioning as SP
             received = SP.fleet_constraint(received, mesh, num_clients)
             t_cut, capped = SP.replicated_constraint((t_cut, capped),
                                                      mesh)
+        if with_counts:
+            return (t_cut, received, capped) \
+                + ledger_counts(received, *masks)
         return t_cut, received, capped
 
     return round_cut

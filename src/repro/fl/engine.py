@@ -59,7 +59,8 @@ BIG = 1 << 20
 
 def make_trainer(sim_cfg: SimConfig, data: FederatedClassification,
                  mesh=None, donate: bool = False, dynamics_features=None,
-                 cohort_size: Optional[int] = None):
+                 cohort_size: Optional[int] = None,
+                 external_cache_params: bool = False):
     """Build the jitted all-fleet local trainer.
 
     ``mesh``: optional ``("clients",)`` fleet mesh — the per-client
@@ -93,6 +94,16 @@ def make_trainer(sim_cfg: SimConfig, data: FederatedClassification,
     overflow flag (``|selected| > X`` — the engine defers it through
     the round ledger).  Everything happens inside the one jitted
     dispatch: compaction adds no per-round host transfer.
+
+    ``external_cache_params``: the ``cache_offload`` trainer variant
+    (requires ``cohort_size``).  ``caches`` then carries metadata only
+    (empty params pytree) and the cohort's (X, ...) cache-params block
+    arrives as an explicit argument — fetched from the host store by
+    the engine's cache stream — together with the precomputed cohort
+    index (the engine derives it in its own small jit so the host can
+    start the fetch as soon as the selection mask is dispatched).  The
+    round body is otherwise identical, so outputs are bit-identical to
+    the resident cohort variant fed the same rows.
     """
     x_all = jnp.asarray(data.x)            # (N, n, d)
     y_all = jnp.asarray(data.y)            # (N, n)
@@ -110,6 +121,9 @@ def make_trainer(sim_cfg: SimConfig, data: FederatedClassification,
     if cohort_size is not None and dynamics_features is None:
         raise ValueError("cohort_size requires the dynamics trainer "
                          "variant (pass dynamics_features)")
+    if external_cache_params and cohort_size is None:
+        raise ValueError("external_cache_params requires the compact "
+                         "cohort trainer variant (pass cohort_size)")
 
     def local_scan(x_arr, y_arr, start_params, steps_needed, stop_step,
                    cache_every):
@@ -237,26 +251,15 @@ def make_trainer(sim_cfg: SimConfig, data: FederatedClassification,
     X = int(cohort_size)
     N = x_all.shape[0]
 
-    @jax.jit
-    def train_cohort_dyn(global_params, caches, draw, selected,
-                         distribute, resume, base_steps, cache_every):
-        """Compact-cohort dynamics round body (see the factory
-        docstring): gather → (X, ...) round body → scatter, one dispatch.
-
-        Inputs are the same (N,)-sized round arrays as the full-scan
-        variant; the cohort index is derived *inside* the jit.  Returns
-        ``(final_params_x, cache_params_x, cached_steps_x, mean_loss_x,
-        steps_needed_x, fail_x, success_x, times_x, idx, overflow,
-        losses_n, fail_n, times_n)`` — the ``_x`` blocks are (X,)-leading
-        cohort arrays; ``losses_n``/``fail_n``/``times_n`` are the (N,)
-        report views policies consume (idle clients read the same
-        zero-loss / no-fail / inf-time values the full scan computes for
-        them).
-        """
-        idx = cohort_index(selected, X)
-        idx = SP.cohort_constraint(idx, mesh, X)
-        overflow = cohort_overflow(selected, X)
-
+    def cohort_round(idx, cache_params_x, global_params, caches, draw,
+                     selected, distribute, resume, base_steps,
+                     cache_every):
+        """Shared gather → (X, ...) round body → scatter given the cohort
+        index.  ``cache_params_x`` is None on the resident path (the
+        cohort's cache slots are gathered from the (N, D) pytree) or the
+        externally-fetched (X, ...) block on the offload path — every
+        other op is identical, which is what keeps the two variants
+        bit-identical row for row."""
         def take(a, fill):
             return jnp.take(a, idx, axis=0, mode="fill", fill_value=fill)
 
@@ -267,7 +270,12 @@ def make_trainer(sim_cfg: SimConfig, data: FederatedClassification,
         ce_x = take(cache_every, 1)
         sps_x = take(feats.steps_per_sec, 1.0)
         draw_x = draw.take(idx)
-        caches_x = core.gather_caches(caches, idx)
+        if cache_params_x is None:
+            caches_x = core.gather_caches(caches, idx)
+        else:
+            caches_x = core.ClientCaches(cache_params_x,
+                                         take(caches.progress, 0.0),
+                                         take(caches.round_stamp, -1))
         x_x = jnp.take(x_all, idx, axis=0, mode="fill", fill_value=0)
         y_x = jnp.take(y_all, idx, axis=0, mode="fill", fill_value=0)
         (x_x, y_x, caches_x, draw_x, sel_x, dist_x, res_x, base_x, ce_x,
@@ -290,10 +298,52 @@ def make_trainer(sim_cfg: SimConfig, data: FederatedClassification,
             .at[idx].set(times, mode="drop")
         losses_n, fail_n, times_n = SP.cohort_scatter_constraint(
             (losses_n, fail_n, times_n), mesh, N)
-        overflow, = SP.replicated_constraint((overflow,), mesh)
         return (params, cache, cached_steps, mean_loss, steps_needed,
-                fail, success, times, idx, overflow, losses_n, fail_n,
-                times_n)
+                fail, success, times, losses_n, fail_n, times_n)
+
+    if external_cache_params:
+        @jax.jit
+        def train_cohort_dyn_offload(global_params, caches,
+                                     cache_params_x, idx, draw, selected,
+                                     distribute, resume, base_steps,
+                                     cache_every):
+            """Offload cohort round body: like ``train_cohort_dyn`` but
+            the cohort index arrives precomputed (the engine's idx jit —
+            same ``cohort_index`` values) and the cohort's cache params
+            arrive as the host-store fetch; ``caches`` carries metadata
+            only.  Returns the 11-tuple without ``idx``/``overflow``
+            (the engine already holds both)."""
+            idx = SP.cohort_constraint(idx, mesh, X)
+            return cohort_round(idx, cache_params_x, global_params,
+                                caches, draw, selected, distribute,
+                                resume, base_steps, cache_every)
+
+        return train_cohort_dyn_offload
+
+    @jax.jit
+    def train_cohort_dyn(global_params, caches, draw, selected,
+                         distribute, resume, base_steps, cache_every):
+        """Compact-cohort dynamics round body (see the factory
+        docstring): gather → (X, ...) round body → scatter, one dispatch.
+
+        Inputs are the same (N,)-sized round arrays as the full-scan
+        variant; the cohort index is derived *inside* the jit.  Returns
+        ``(final_params_x, cache_params_x, cached_steps_x, mean_loss_x,
+        steps_needed_x, fail_x, success_x, times_x, idx, overflow,
+        losses_n, fail_n, times_n)`` — the ``_x`` blocks are (X,)-leading
+        cohort arrays; ``losses_n``/``fail_n``/``times_n`` are the (N,)
+        report views policies consume (idle clients read the same
+        zero-loss / no-fail / inf-time values the full scan computes for
+        them).
+        """
+        idx = cohort_index(selected, X)
+        idx = SP.cohort_constraint(idx, mesh, X)
+        overflow = cohort_overflow(selected, X)
+        outs = cohort_round(idx, None, global_params, caches, draw,
+                            selected, distribute, resume, base_steps,
+                            cache_every)
+        overflow, = SP.replicated_constraint((overflow,), mesh)
+        return outs[:8] + (idx, overflow) + outs[8:]
 
     return train_cohort_dyn
 
@@ -301,18 +351,6 @@ def make_trainer(sim_cfg: SimConfig, data: FederatedClassification,
 # ---------------------------------------------------------------------------
 # Round history
 # ---------------------------------------------------------------------------
-
-@jax.jit
-def _ledger_counts(received, online, distribute, selected):
-    """The three (N,) ledger reductions of a round in one dispatch.
-
-    ``(distribute & online)`` is ``FleetDraw.download_mask`` inlined —
-    eager, these are ~5 op-by-op dispatches over fleet-sized arrays every
-    round, which shows up at large N (the device math itself is trivial).
-    Returns device scalars; the ledger resolves them later, so the
-    pipelined loop still never blocks here."""
-    return (received.sum(), (distribute & online).sum(), selected.sum())
-
 
 @dataclasses.dataclass
 class History:
@@ -487,6 +525,7 @@ class FleetEngine:
             raise ValueError(f"FLConfig.pipeline_depth must be >= 1, got "
                              f"{fl_cfg.pipeline_depth}")
         self.cohort = fl_cfg.cohort_size
+        self.offload = fl_cfg.cache_offload
         if self.cohort is not None \
                 and get_dynamics(fl_cfg.dynamics).host_side:
             raise ValueError(
@@ -523,6 +562,24 @@ class FleetEngine:
         # the malicious mask is per-run-invariant: placed once, reused
         self._malicious = None if self._adv_scale is None else \
             self._put1(self._malicious_np)
+        # host-offloaded C3 cache store (cache_offload="host"/"discard"):
+        # the (N, D) cache params live in a sparse host store; the device
+        # keeps (N,) metadata plus the round's (X, D) cohort block, and
+        # the stream double-buffers the fetch/write-back copies
+        self.cache_store = None
+        self._cache_stream = None
+        self._idx_fn = None
+        self._expire_fn = None
+        self._zeros_x = None
+        if self.offload is not None:
+            bound = fl_cfg.cache_staleness_bound \
+                if self.offload == "discard" else None
+            self.cache_store = core.HostCacheStore(
+                self._template, fl_cfg.num_clients,
+                staleness_bound=bound)
+            self._cache_stream = core.CohortCacheStream(
+                self.cache_store, mesh=self.mesh,
+                cohort_size=self.cohort)
 
     def _build_mesh(self, fl_cfg: FLConfig):
         if fl_cfg.mesh_shape is None:
@@ -580,6 +637,13 @@ class FleetEngine:
         through (``zeros_like`` keeps the donated leaves' placement)."""
         N = self.fl_cfg.num_clients
         spent, self._last_caches = self._last_caches, None
+        if self.offload is not None:
+            # offload: params live in the host store — reset it (and any
+            # write-back still in flight) and keep only (N,) metadata on
+            # device; the reset-recycling below applies unchanged to the
+            # metadata-only pytree
+            self._cache_stream.reset()
+            template = {}
         if self.donate and spent is not None:
             if self._cache_reset is None:
                 self._cache_reset = jax.jit(core.reset_caches,
@@ -597,7 +661,8 @@ class FleetEngine:
         # step separately from the full-scan one)
         mesh_key = None if self.mesh is None else \
             tuple(self.mesh.devices.shape)
-        key = (bool(uses_cache), mesh_key, self.donate, self.cohort)
+        key = (bool(uses_cache), mesh_key, self.donate, self.cohort,
+               self.offload)
         if key not in self._server_steps:
             self._server_steps[key] = core.make_server_round_step(
                 self._template, local_steps=self.sim_cfg.local_steps,
@@ -609,7 +674,8 @@ class FleetEngine:
                 uses_cache=bool(uses_cache),
                 block_c=self.fl_cfg.agg_block_c,
                 block_d=self.fl_cfg.agg_block_d, mesh=self.mesh,
-                donate=self.donate, cohort_size=self.cohort)
+                donate=self.donate, cohort_size=self.cohort,
+                cache_offload=self.offload)
         return self._server_steps[key]
 
     # -- robust-aggregation state / adversary plumbing ----------------------
@@ -648,11 +714,22 @@ class FleetEngine:
         packed aggregation buffer are (X, ...) cohort blocks, not (N, ...)
         — ``packed_rows``/``packed_buffer_bytes`` report which buffer
         actually lives on device.
+
+        Beyond the XLA analysis, the profile reports the engine's
+        persistent fleet-state residency: ``rule_state_bytes`` (the
+        stateful robust-aggregation (N,) vector, 0 for stateless rules)
+        and the C3 cache split ``cache_device_bytes`` /
+        ``cache_host_bytes`` — resident mode keeps the whole (N, D)
+        pytree on device and 0 bytes on host; under ``cache_offload``
+        the device holds only (N,) metadata plus the (X, D) cohort
+        block (O(X·D), fleet-size-independent) and the host side is the
+        store's current live rows.
         """
         N = self.fl_cfg.num_clients
         rows = N if self.cohort is None else int(self.cohort)
         step = self._server_step(uses_cache)
-        caches = core.init_caches(self._template, N)
+        meta_only = self.offload is not None
+        caches = core.init_caches({} if meta_only else self._template, N)
         stacked = jax.tree.map(
             lambda a: jnp.zeros((rows,) + a.shape, a.dtype),
             self._template)
@@ -662,11 +739,18 @@ class FleetEngine:
         mask = self._put1(np.zeros(rows, bool))
         steps_i = self._put1(np.zeros(rows, np.int32))
         ones = self._put1(np.ones(N, np.float32))
-        extra = self._step_extra(self._init_rule_state())
+        rule_state = self._init_rule_state()
+        extra = self._step_extra(rule_state)
         # lower() only traces — nothing executes, nothing is donated
         if self.cohort is None:
             lowered = step.lower(self._template, caches, stacked, stacked,
                                  steps_i, mask, mask, mask, mask,
+                                 self._n_samples, ones, 0, *extra)
+        elif meta_only:
+            idx = self._put1(np.arange(rows, dtype=np.int32))
+            mask_n = self._put1(np.zeros(N, bool))
+            lowered = step.lower(self._template, caches, stacked,
+                                 steps_i, idx, mask_n, mask, mask, mask_n,
                                  self._n_samples, ones, 0, *extra)
         else:
             idx = self._put1(np.arange(rows, dtype=np.int32))
@@ -686,6 +770,25 @@ class FleetEngine:
         layout = core.pack_layout(self._template)
         out["packed_rows"] = rows
         out["packed_buffer_bytes"] = layout.buffer_bytes(rows)
+
+        def tree_bytes(tree):
+            return sum(int(np.prod(np.shape(l), dtype=np.int64))
+                       * np.dtype(jnp.asarray(l).dtype).itemsize
+                       for l in jax.tree.leaves(tree))
+
+        out["rule_state_bytes"] = 0 if rule_state is None \
+            else tree_bytes(rule_state)
+        meta_bytes = tree_bytes((caches.progress, caches.round_stamp))
+        if meta_only:
+            # device residency: (N,) metadata + the per-round (X, D)
+            # cohort slot block — O(X·D), independent of fleet size
+            out["cache_device_bytes"] = meta_bytes \
+                + rows * self.cache_store.row_bytes
+            out["cache_host_bytes"] = self.cache_store.nbytes
+        else:
+            out["cache_device_bytes"] = meta_bytes \
+                + tree_bytes(caches.params)
+            out["cache_host_bytes"] = 0
         return out
 
     def run(self, policy: Union[str, Policy], rounds: Optional[int] = None,
@@ -790,23 +893,27 @@ class FleetEngine:
 
     def _round_cut(self, waits_for_stragglers: bool):
         """Memoized jitted device round cut (one variant per the policy's
-        straggler trait) — ``(times, quorum, success) -> (t_cut, duration,
-        received)``, everything device-resident.  With a cohort the cut
-        runs over the (X,) gathered finish times and additionally
+        straggler trait), everything device-resident.  With a cohort the
+        cut runs over the (X,) gathered finish times and additionally
         scatters the (N,) receive mask (every finite time belongs to a
         cohort member, so the order statistics — and the cut — are
-        exact)."""
+        exact).  Built with ``with_counts=True``: the cut also returns
+        the round's (received, download, selected) ledger counts as
+        device scalars, fused into the same dispatch — the loop hands
+        them straight to the ledger, so per-round host bookkeeping is
+        O(1) scalar handles instead of an extra (N,)-reducing jit."""
         key = (bool(waits_for_stragglers), self.cohort)
         if key not in self._cut_fns:
             if self.cohort is None:
                 self._cut_fns[key] = core.make_round_cut(
                     self.fl_cfg.num_clients, self.sim_cfg.round_deadline,
-                    key[0], mesh=self.mesh)
+                    key[0], mesh=self.mesh, with_counts=True)
             else:
                 self._cut_fns[key] = core.make_round_cut(
                     self.cohort, self.sim_cfg.round_deadline, key[0],
                     mesh=self.mesh,
-                    scatter_num_clients=self.fl_cfg.num_clients)
+                    scatter_num_clients=self.fl_cfg.num_clients,
+                    with_counts=True)
         return self._cut_fns[key]
 
     def _validate_plan(self, plan):
@@ -969,7 +1076,7 @@ class FleetEngine:
         produced.  (The round cut is memoized separately per straggler
         trait — see ``_round_cut``.)"""
         key = (self.fl_cfg.dynamics, self.fl_cfg.dynamics_params,
-               self.cohort)
+               self.cohort, self.offload)
         if key not in self._dyn_cache:
             N = self.fl_cfg.num_clients
             mesh = self.mesh
@@ -985,9 +1092,10 @@ class FleetEngine:
 
             init_fn = jax.jit(lambda k: SP.fleet_constraint(
                 process.init_state(k), mesh, N))
-            trainer = make_trainer(self.sim_cfg, self.data, mesh=mesh,
-                                   dynamics_features=feats,
-                                   cohort_size=self.cohort)
+            trainer = make_trainer(
+                self.sim_cfg, self.data, mesh=mesh,
+                dynamics_features=feats, cohort_size=self.cohort,
+                external_cache_params=self.offload is not None)
             self._dyn_cache[key] = (process, init_fn, jax.jit(step),
                                     trainer)
         return self._dyn_cache[key]
@@ -1019,6 +1127,62 @@ class FleetEngine:
             return arr
         return self._put1(np.asarray(arr) if dtype is None
                           else np.asarray(arr, dtype))
+
+    # -- cache-offload round plumbing ----------------------------------------
+
+    def _offload_idx_fn(self):
+        """Memoized jit deriving the round's cohort index + overflow flag
+        from the selection mask.  On the resident path this lives inside
+        the trainer jit; the offload path needs the index *before* the
+        trainer runs (the host-store fetch consumes it), so it gets its
+        own small dispatch — same ``cohort_index`` computation, so the
+        values (and everything downstream) are identical."""
+        if self._idx_fn is None:
+            X, mesh = int(self.cohort), self.mesh
+
+            @jax.jit
+            def idx_fn(selected):
+                idx = SP.cohort_constraint(cohort_index(selected, X),
+                                           mesh, X)
+                overflow, = SP.replicated_constraint(
+                    (cohort_overflow(selected, X),), mesh)
+                return idx, overflow
+
+            self._idx_fn = idx_fn
+        return self._idx_fn
+
+    def _expire_fn_jit(self):
+        """Memoized jit of the device-side discard expiry (metadata-only
+        ``core.expire_caches`` with the configured bound)."""
+        if self._expire_fn is None:
+            mesh, N = self.mesh, self.fl_cfg.num_clients
+            bound = int(self.fl_cfg.cache_staleness_bound)
+
+            @jax.jit
+            def expire_fn(caches, rnd):
+                return SP.fleet_constraint(
+                    core.expire_caches(caches, rnd, bound), mesh, N)
+
+            self._expire_fn = expire_fn
+        return self._expire_fn
+
+    def _zero_cohort_block(self):
+        """Memoized all-zero (X, ...) cache block for policies that never
+        cache (``uses_cache=False``): the resident path would gather the
+        never-written zero pytree, so a constant zeros block placed once
+        keeps the offload trainer's inputs — and its rounds — identical,
+        with no per-round transfer at all."""
+        if self._zeros_x is None:
+            X = int(self.cohort)
+            block = jax.tree.map(
+                lambda a: jnp.zeros((X,) + a.shape, a.dtype),
+                self._template)
+            if self.mesh is not None:
+                block = jax.device_put(block, jax.tree.map(
+                    lambda l: SP.cohort_sharding(self.mesh, l.ndim),
+                    block))
+            self._zeros_x = block
+        return self._zeros_x
 
     def _device_rounds(self, policy, state, fleet, hist, global_params,
                        caches, rng, n_rounds, time_budget, eval_every,
@@ -1064,6 +1228,12 @@ class FleetEngine:
             rng, k_sel = jax.random.split(rng)
             fstate, draw = step_fn(fstate,
                                    jax.random.fold_in(dyn_base, rnd))
+            if self.offload == "discard" and policy.uses_cache:
+                # device half of the discard bound: expire stale cache
+                # metadata *before* planning reads it, so the planner
+                # never resumes a row the host store prunes (the store
+                # prunes with the same bound at write-back drain)
+                caches = self._expire_fn_jit()(caches, rnd)
             state, plan = policy.plan(
                 state, RoundObservation(rnd, draw.online, caches,
                                         draw=draw), k_sel)
@@ -1087,9 +1257,11 @@ class FleetEngine:
                 # round termination on device: the cut is a device scalar
                 # and the receive mask stays sharded; deadline-capped
                 # rounds come back as a flag so the ledger bills the
-                # exact f64 deadline
-                t_cut, received, capped = cut_fn(times, plan.quorum,
-                                                 success)
+                # exact f64 deadline.  The ledger counts ride the same
+                # dispatch (``with_counts``).
+                (t_cut, received, capped, recv_n, down_n,
+                 sel_n) = cut_fn(times, plan.quorum, success,
+                                 draw.online, dist_d, sel_d)
                 overflow = None
                 out = server_step(
                     global_params, caches, final, cache_p, cached_steps,
@@ -1102,7 +1274,7 @@ class FleetEngine:
                 report = RoundReport(received=received, fail=fail,
                                      losses=losses, durations=times,
                                      duration=t_cut, rnd=rnd)
-            else:
+            elif self.offload is None:
                 # compact cohort: the trainer gathers the selected rows
                 # into (X, ...) blocks on device and hands back scattered
                 # (N,) report views; cut + aggregation run over X rows
@@ -1111,8 +1283,9 @@ class FleetEngine:
                  times_n) = trainer(global_params, caches, draw, sel_d,
                                     dist_d, res_d, base_steps,
                                     cache_every)
-                t_cut, _received_x, received, capped = cut_fn(
-                    times, plan.quorum, success, idx)
+                (t_cut, _received_x, received, capped, recv_n, down_n,
+                 sel_n) = cut_fn(times, plan.quorum, success, idx,
+                                 draw.online, dist_d, sel_d)
                 # observability seam (tests / debugging): the last
                 # round's device cohort index, still sharded
                 self._last_cohort_idx = idx
@@ -1127,14 +1300,51 @@ class FleetEngine:
                 report = RoundReport(received=received, fail=fail_n,
                                      losses=losses_n, durations=times_n,
                                      duration=t_cut, rnd=rnd)
+            else:
+                # host-offloaded cohort caches: derive the cohort index
+                # in its own small jit so the host can start streaming
+                # the cohort's cache rows (async d2h of idx, drain of
+                # last round's write-back, async device_put of the (X,
+                # ...) block) while this round's other dispatches are
+                # being issued; the trainer/cut/server step are the same
+                # cohort ops over the same rows, so trajectories stay
+                # bit-identical to the resident path
+                idx, overflow = self._offload_idx_fn()(sel_d)
+                if policy.uses_cache:
+                    cache_x = self._cache_stream.fetch(idx, rnd)
+                else:
+                    cache_x = self._zero_cohort_block()
+                (final, cache_p, cached_steps, _losses_x, _steps_x, fail,
+                 success, times, losses_n, fail_n, times_n) = trainer(
+                    global_params, caches, cache_x, idx, draw, sel_d,
+                    dist_d, res_d, base_steps, cache_every)
+                (t_cut, _received_x, received, capped, recv_n, down_n,
+                 sel_n) = cut_fn(times, plan.quorum, success, idx,
+                                 draw.online, dist_d, sel_d)
+                self._last_cohort_idx = idx
+                out = server_step(
+                    global_params, caches, final, cached_steps, idx,
+                    sel_d, fail, _received_x, res_d, n_samples, extra_w,
+                    rnd, *self._step_extra(rule_state))
+                if self._agg_stateful:
+                    (global_params, caches, write_x, stamp_x,
+                     rule_state) = out
+                else:
+                    global_params, caches, write_x, stamp_x = out
+                if policy.uses_cache:
+                    # park the round's write-back: async copies start
+                    # now, nothing blocks until next round's fetch
+                    self._cache_stream.stage(idx, write_x, _received_x,
+                                             cache_p, stamp_x)
+                report = RoundReport(received=received, fail=fail_n,
+                                     losses=losses_n, durations=times_n,
+                                     duration=t_cut, rnd=rnd)
 
             state = policy.observe(state, plan, report)
 
             evaluated = rnd % eval_every == 0 or rnd == n_rounds - 1
             acc_dev = self._acc_fn(global_params, self._test_x,
                                    self._test_y) if evaluated else None
-            recv_n, down_n, sel_n = _ledger_counts(
-                received, draw.online, dist_d, sel_d)
             ledger.push(rnd, evaluated, t_cut, capped, recv_n,
                         down_n, sel_n, acc_dev, overflow=overflow)
             if progress and rnd % 10 == 0:
@@ -1143,6 +1353,11 @@ class FleetEngine:
                 ledger.resolve(keep=self.pipeline_depth - 1)
 
         ledger.resolve()
+        if self._cache_stream is not None:
+            # apply the last round's parked write-back so the host store
+            # reflects the final cache state (its copies have been in
+            # flight since that round's server step was dispatched)
+            self._cache_stream.flush(n_rounds)
         # pipelining seam: the process state (and last draw) stay
         # device-resident between runs, like the caches
         self._last_fleet_state = fstate

@@ -39,7 +39,11 @@ BIG = 1 << 20
 
 class FludePolicyState(NamedTuple):
     core: core.FludeState
-    last: Optional[core.FludePlan]     # plan pending its observe()
+    last: Optional[core.FludePlan]     # plan pending its belief update
+    # the raw receive mask of ``last``'s round, parked dispatch-free by
+    # ``observe`` and folded into the *next* round's plan dispatch (or
+    # flushed at run end) — Eq. 1 bookkeeping costs zero extra dispatches
+    pending_received: Optional[jax.Array] = None
 
 
 # Alg. 1/2 planning and Eq. 1/3 bookkeeping are pure jnp over fixed-shape
@@ -47,18 +51,35 @@ class FludePolicyState(NamedTuple):
 # runner's eager op-by-op evaluation.  Memoized per config so repeated
 # short runs (test suites, policy sweeps) never re-trace; bounded so a
 # config sweep doesn't pin compiled executables for the process lifetime.
+def _plan_body(st, caches, online, rng, hints, fl_cfg, with_hints):
+    p = core.plan_round(st, caches, online, fl_cfg, rng,
+                        explore_hints=hints if with_hints else None)
+    # quorum clamp (can't wait for more receipts than selections)
+    # fused into the plan dispatch: eager it is three op-by-op
+    # round-trips per round; the f32 minimum here equals the host
+    # path's float() min bit-for-bit (both operands are exact f32)
+    q = jnp.minimum(p.quorum, p.selected.sum().astype(jnp.float32))
+    return p._replace(quorum=q)
+
+
 @functools.lru_cache(maxsize=8)
 def _flude_plan_jit(fl_cfg, with_hints: bool):
-    def planner(st, caches, online, rng, hints):
-        p = core.plan_round(st, caches, online, fl_cfg, rng,
-                            explore_hints=hints if with_hints else None)
-        # quorum clamp (can't wait for more receipts than selections)
-        # fused into the plan dispatch: eager it is three op-by-op
-        # round-trips per round; the f32 minimum here equals the host
-        # path's float() min bit-for-bit (both operands are exact f32)
-        q = jnp.minimum(p.quorum, p.selected.sum().astype(jnp.float32))
-        return p._replace(quorum=q)
-    return jax.jit(planner)
+    return jax.jit(lambda st, caches, online, rng, hints: _plan_body(
+        st, caches, online, rng, hints, fl_cfg, with_hints))
+
+
+@functools.lru_cache(maxsize=8)
+def _flude_update_plan_jit(fl_cfg, with_hints: bool):
+    """Fused Eq. 1 belief update (previous round's receipts) + this
+    round's Alg. 1/2 plan — one dispatch where the eager split costs
+    two.  The update runs first on the same values ``observe`` would
+    have passed, so the state sequence (and every plan drawn from it)
+    is unchanged."""
+    def update_plan(st, last, received, caches, online, rng, hints):
+        st = core.update_after_round(st, last, received, fl_cfg)
+        return st, _plan_body(st, caches, online, rng, hints, fl_cfg,
+                              with_hints)
+    return jax.jit(update_plan)
 
 
 @functools.lru_cache(maxsize=8)
@@ -84,46 +105,68 @@ class FludePolicy(Policy):
                 np.asarray(fleet.battery * fleet.stability, np.float32),
                 mesh)
         self._plan_jit = _flude_plan_jit(fl_cfg, self._hints is not None)
+        self._update_plan_jit = _flude_update_plan_jit(
+            fl_cfg, self._hints is not None)
         self._update_jit = _flude_update_jit(fl_cfg)
         if self._hints is None:
             self._hints = place_per_client(
                 np.zeros((fl_cfg.num_clients,), np.float32), mesh)
 
     def init_state(self) -> FludePolicyState:
-        return FludePolicyState(core.init_state(self.fl_cfg), None)
+        return FludePolicyState(core.init_state(self.fl_cfg), None, None)
 
     def plan(self, state, obs: RoundObservation, rng):
+        # fold the parked previous-round receipts (Eq. 1) into this
+        # round's plan dispatch — same update on the same values, one
+        # dispatch instead of two
+        if state.pending_received is not None:
+            plan_fused = lambda st, caches, online, rng_, hints: \
+                self._update_plan_jit(st, state.last,
+                                      state.pending_received, caches,
+                                      online, rng_, hints)
+        else:
+            plan_fused = lambda st, caches, online, rng_, hints: \
+                (st, self._plan_jit(st, caches, online, rng_, hints))
         if obs.draw is not None:
-            # device round path: the online mask, the plan AND the quorum
-            # clamp stay on device (the clamp is fused into the plan
-            # jit), and RoundPlan.device runs structural checks only —
-            # planning is a pure dispatch, so the pipelined engine loop
-            # never drains the device queue here.
-            p = self._plan_jit(state.core, obs.caches, obs.draw.online,
+            # device round path: the online mask, the belief update, the
+            # plan AND the quorum clamp stay on device, and
+            # RoundPlan.device runs structural checks only — planning is
+            # a pure dispatch, so the pipelined engine loop never drains
+            # the device queue here.
+            st, p = plan_fused(state.core, obs.caches, obs.draw.online,
                                rng, self._hints)
             plan = RoundPlan.device(p.selected, p.distribute, p.resume,
                                     p.quorum)
-            return FludePolicyState(state.core, p), plan
+            return FludePolicyState(st, p, None), plan
         # legacy host-RNG path: re-upload the numpy mask, validate on host
-        p = self._plan_jit(state.core, obs.caches, jnp.asarray(obs.online),
-                           rng, self._hints)
+        st, p = plan_fused(state.core, obs.caches,
+                           jnp.asarray(obs.online), rng, self._hints)
         quorum = float(p.quorum)    # already clamped inside the plan jit
         # masks stay jax arrays: the engine consumes them in place, and
         # the host path's np.asarray sees equal values
         plan = RoundPlan.create(p.selected, p.distribute, p.resume, quorum)
-        return FludePolicyState(state.core, p), plan
+        return FludePolicyState(st, p, None), plan
 
     def observe(self, state, plan, report: RoundReport):
         # under correlated dynamics (markov/sessions/trace) the received
         # mask folds *correlated* outcomes into the Beta dependability
         # beliefs (Eq. 1) — the posterior tracks the realized process,
-        # not an i.i.d. idealization; the update rule is unchanged
-        new_core = self._update_jit(state.core, state.last,
-                                    jnp.asarray(report.received))
-        return FludePolicyState(new_core, None)
+        # not an i.i.d. idealization; the update rule is unchanged.  The
+        # mask is parked as-is (zero dispatches here) and the update
+        # rides the next plan's jit (or the run-end flush below).
+        return FludePolicyState(state.core, state.last,
+                                jnp.asarray(report.received))
+
+    def _flush(self, state) -> core.FludeState:
+        """Apply the parked final-round update (run end: no next plan
+        dispatch will fold it in)."""
+        if state.pending_received is None:
+            return state.core
+        return self._update_jit(state.core, state.last,
+                                state.pending_received)
 
     def history_extras(self, state):
-        return {"part_count": np.asarray(state.core.part_count)}
+        return {"part_count": np.asarray(self._flush(state).part_count)}
 
 
 # ---------------------------------------------------------------------------
