@@ -30,7 +30,6 @@ import json
 import os
 import subprocess
 import sys
-import time
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +41,11 @@ from repro.configs.base import FLConfig
 from repro.data.synthetic import federated_classification
 from repro.fl import Fleet, FleetEngine, SimConfig, make_trainer
 from repro.fl import classifier as CLF
+from repro.obs import Tracer
+
+# benchmark clock: every timed section is a tracer span, so one run's
+# measurement timeline can be dumped as a Perfetto trace if needed
+TRACER = Tracer()
 
 BIG = 1 << 20
 SIZES = (64, 256) if QUICK else (256, 1024, 4096)
@@ -83,10 +87,9 @@ def host_loop(data, sim, fl, n_rounds, fleet):
     test_y = jnp.asarray(data.test_y)
     rng = jax.random.key(sim.seed)
     acc = float("nan")
-    t_after_warmup = None
-    for rnd in range(n_rounds):
-        if rnd == WARMUP:
-            t_after_warmup = time.time()
+
+    def _round(rnd):
+        nonlocal rng, fstate, caches, params, acc
         rng, k_sel = jax.random.split(rng)
         online = fleet.online_mask()
         p = core.plan_round(fstate, caches, jnp.asarray(online), fl, k_sel,
@@ -157,7 +160,13 @@ def host_loop(data, sim, fl, n_rounds, fleet):
             jnp.asarray(progress_h), jnp.asarray(stamp_h))
         # per-round eval (the old loop's default)
         acc = float(acc_fn(params, test_x, test_y))
-    return acc, time.time() - t_after_warmup
+
+    for rnd in range(WARMUP):
+        _round(rnd)
+    with TRACER.span("bench_host_loop", n=N) as sp:
+        for rnd in range(WARMUP, n_rounds):
+            _round(rnd)
+    return acc, sp.seconds
 
 
 def engine_loop(data, sim, fl, n_rounds, fleet):
@@ -166,10 +175,10 @@ def engine_loop(data, sim, fl, n_rounds, fleet):
     # variants see identical draws
     engine = FleetEngine(data, sim, fl, fleet=fleet)
     engine.run(POLICY, rounds=WARMUP, diagnostics=False)    # jit warmup
-    t0 = time.time()
-    h = engine.run(POLICY, rounds=n_rounds - WARMUP,
-                   eval_every=n_rounds, diagnostics=False)
-    return h.acc[-1], time.time() - t0
+    with TRACER.span("bench_engine_loop", n=fl.num_clients) as sp:
+        h = engine.run(POLICY, rounds=n_rounds - WARMUP,
+                       eval_every=n_rounds, diagnostics=False)
+    return h.acc[-1], sp.seconds
 
 
 def run():
@@ -232,12 +241,11 @@ def mesh_child(k: int):
         # on the same draw stream
         engine = FleetEngine(data, sim, fl2, fleet=Fleet(sim))
         engine.run(POLICY, rounds=WARMUP, diagnostics=False)   # jit warmup
-        t0 = time.time()
-        engine.run(POLICY, rounds=ROUNDS, eval_every=ROUNDS,
-                   diagnostics=False)
-        dt = time.time() - t0
+        with TRACER.span("bench_mesh", devices=k, donate=donate) as sp:
+            engine.run(POLICY, rounds=ROUNDS, eval_every=ROUNDS,
+                       diagnostics=False)
         out["donate"]["on" if donate else "off"] = {
-            "rounds_per_sec": ROUNDS / dt,
+            "rounds_per_sec": ROUNDS / sp.seconds,
             **engine.server_step_memory(uses_cache=True)}
     print(json.dumps(out))
 
@@ -320,11 +328,11 @@ def run_pipeline():
     acc = {}
     for _ in range(PIPE_REPS):
         for depth in PIPE_DEPTHS:
-            t0 = time.time()
-            h = engines[depth].run(POLICY, rounds=PIPE_ROUNDS,
-                                   eval_every=PIPE_EVAL_EVERY,
-                                   diagnostics=False)
-            reps[depth].append(PIPE_ROUNDS / (time.time() - t0))
+            with TRACER.span("bench_pipeline", depth=depth) as sp:
+                h = engines[depth].run(POLICY, rounds=PIPE_ROUNDS,
+                                       eval_every=PIPE_EVAL_EVERY,
+                                       diagnostics=False)
+            reps[depth].append(PIPE_ROUNDS / sp.seconds)
             acc[depth] = h.acc[-1]
     depths = {}
     for depth in PIPE_DEPTHS:
@@ -454,10 +462,11 @@ def run_cohort():
     for _ in range(COHORT_REPS):
         for k in order:
             engine, _cpr = engines[k]
-            t0 = time.time()
-            engine.run(POLICY, rounds=COHORT_ROUNDS,
-                       eval_every=10 * COHORT_ROUNDS, diagnostics=False)
-            reps[k].append(COHORT_ROUNDS / (time.time() - t0))
+            with TRACER.span("bench_cohort", point=k) as sp:
+                engine.run(POLICY, rounds=COHORT_ROUNDS,
+                           eval_every=10 * COHORT_ROUNDS,
+                           diagnostics=False)
+            reps[k].append(COHORT_ROUNDS / sp.seconds)
     # the pair is ~1% of the sweep's wall-clock, so oversample it: the
     # two rates sit within a few percent of each other and a handful of
     # paired samples still leaves their median at the mercy of one bad
@@ -465,10 +474,11 @@ def run_cohort():
     for _ in range(PAIR_EXTRA_REPS if "512" in engines else 0):
         for k in ("512", "full_n512"):
             engine, _cpr = engines[k]
-            t0 = time.time()
-            engine.run(POLICY, rounds=COHORT_ROUNDS,
-                       eval_every=10 * COHORT_ROUNDS, diagnostics=False)
-            reps[k].append(COHORT_ROUNDS / (time.time() - t0))
+            with TRACER.span("bench_cohort_pair", point=k) as sp:
+                engine.run(POLICY, rounds=COHORT_ROUNDS,
+                           eval_every=10 * COHORT_ROUNDS,
+                           diagnostics=False)
+            reps[k].append(COHORT_ROUNDS / sp.seconds)
     sweep = {}
     for k, (engine, cpr) in engines.items():
         best = max(reps[k])
@@ -495,10 +505,10 @@ def run_cohort():
     engine = FleetEngine(smoke_data, smoke_sim, smoke_fl,
                          fleet=Fleet(smoke_sim))
     engine.run(POLICY, rounds=WARMUP, diagnostics=False)      # jit warmup
-    t0 = time.time()
-    engine.run(POLICY, rounds=SMOKE_ROUNDS, eval_every=10 * SMOKE_ROUNDS,
-               diagnostics=False)
-    dt = time.time() - t0
+    with TRACER.span("bench_cohort_smoke", n=N_SMOKE) as sp:
+        engine.run(POLICY, rounds=SMOKE_ROUNDS,
+                   eval_every=10 * SMOKE_ROUNDS, diagnostics=False)
+    dt = sp.seconds
     mem = engine.server_step_memory()
     live = int(sum(a.nbytes for a in jax.live_arrays()))
     smoke = {"n": N_SMOKE, "cohort_size": X_SMOKE,
@@ -609,10 +619,11 @@ def run_offload():
     reps = {k: [] for k in engines}
     for _ in range(OFFLOAD_REPS):
         for k, engine in engines.items():   # modes of one X stay paired
-            t0 = time.time()
-            engine.run(POLICY, rounds=OFFLOAD_ROUNDS,
-                       eval_every=10 * OFFLOAD_ROUNDS, diagnostics=False)
-            reps[k].append(OFFLOAD_ROUNDS / (time.time() - t0))
+            with TRACER.span("bench_offload", point=k) as sp:
+                engine.run(POLICY, rounds=OFFLOAD_ROUNDS,
+                           eval_every=10 * OFFLOAD_ROUNDS,
+                           diagnostics=False)
+            reps[k].append(OFFLOAD_ROUNDS / sp.seconds)
     # oversample the acceptance-critical X=512 trio: the resident point
     # is compared against the prior cohort record's best-of-15 rate (5
     # reps + 10 pair-extra), so a best-of-5 here would understate it by
@@ -622,10 +633,11 @@ def run_offload():
     for _ in range(PAIR_EXTRA_REPS if pair_keys else 0):
         for k in pair_keys:
             engine = engines[k]
-            t0 = time.time()
-            engine.run(POLICY, rounds=OFFLOAD_ROUNDS,
-                       eval_every=10 * OFFLOAD_ROUNDS, diagnostics=False)
-            reps[k].append(OFFLOAD_ROUNDS / (time.time() - t0))
+            with TRACER.span("bench_offload_pair", point=k) as sp:
+                engine.run(POLICY, rounds=OFFLOAD_ROUNDS,
+                           eval_every=10 * OFFLOAD_ROUNDS,
+                           diagnostics=False)
+            reps[k].append(OFFLOAD_ROUNDS / sp.seconds)
 
     sweep = {}
     for k, engine in engines.items():
@@ -678,10 +690,10 @@ def run_offload():
                          smoke_fl, fleet=Fleet(smoke_sim))
     engine.run(POLICY, rounds=WARMUP, diagnostics=False)      # jit warmup
     CS.STATS.reset()
-    t0 = time.time()
-    engine.run(POLICY, rounds=SMOKE_ROUNDS, eval_every=10 * SMOKE_ROUNDS,
-               diagnostics=False)
-    dt = time.time() - t0
+    with TRACER.span("bench_offload_smoke", n=N_SMOKE) as sp:
+        engine.run(POLICY, rounds=SMOKE_ROUNDS,
+                   eval_every=10 * SMOKE_ROUNDS, diagnostics=False)
+    dt = sp.seconds
     mem = engine.server_step_memory()
     live = int(sum(a.nbytes for a in jax.live_arrays()))
     row = engine.cache_store.row_bytes
@@ -740,6 +752,93 @@ def run_offload():
     return record
 
 
+TEL_ROUNDS = 4 if QUICK else 10
+TEL_REPS = 2 if QUICK else 3
+TEL_JSONL = "telemetry_run.jsonl"
+TEL_TRACE = "telemetry_trace.json"
+
+
+def run_telemetry():
+    """Telemetry overhead: rounds/sec with telemetry off vs "full".
+
+    One pre-compiled engine (N=N_MESH full-scan, device dynamics); each
+    rep runs the off and full variants back-to-back so the per-rep
+    ratio differences out that window's machine load — the paired
+    median is the overhead statistic, best-of rates are recorded too.
+    The fused metrics dispatch rides the round ledger's readback (zero
+    added host syncs), so the expected overhead is one extra small
+    dispatch per round.  Also records a *real* run's artifacts —
+    telemetry JSONL + Perfetto trace under results/benchmarks/ — and
+    renders the report CLI against them.  Merged into BENCH_engine.json
+    under "telemetry"."""
+    from repro import obs
+    from repro.obs import report as obs_report
+    n = N_MESH
+    sim, fl, data = _setup(n)
+    sim = dataclasses.replace(
+        sim, rounds=WARMUP + TEL_ROUNDS * (2 * TEL_REPS + 2))
+    fl2 = dataclasses.replace(fl, dynamics="bernoulli")
+    engine = FleetEngine(data, sim, fl2, fleet=Fleet(sim))
+    engine.run(POLICY, rounds=WARMUP, diagnostics=False)  # round-path jit
+    engine.run(POLICY, rounds=WARMUP, diagnostics=False,
+               telemetry="full")                          # metrics jit
+
+    reps_off, reps_full = [], []
+    for _ in range(TEL_REPS):
+        with TRACER.span("bench_tel_off") as sp:
+            engine.run(POLICY, rounds=TEL_ROUNDS,
+                       eval_every=10 * TEL_ROUNDS, diagnostics=False,
+                       telemetry=False)
+        reps_off.append(TEL_ROUNDS / sp.seconds)
+        with TRACER.span("bench_tel_full") as sp:
+            engine.run(POLICY, rounds=TEL_ROUNDS,
+                       eval_every=10 * TEL_ROUNDS, diagnostics=False,
+                       telemetry="full")
+        reps_full.append(TEL_ROUNDS / sp.seconds)
+    paired = sorted(off / full for off, full in zip(reps_off, reps_full))
+    overhead_pct = (paired[len(paired) // 2] - 1.0) * 100.0
+
+    # real-run artifacts: JSONL + Perfetto trace + report render
+    os.makedirs(RESULTS, exist_ok=True)
+    jsonl = os.path.join(RESULTS, TEL_JSONL)
+    trace = os.path.join(RESULTS, TEL_TRACE)
+    if os.path.exists(jsonl):
+        os.remove(jsonl)
+    tel = obs.Telemetry(level="full", jsonl=jsonl, trace=trace)
+    engine.run(POLICY, rounds=TEL_ROUNDS, eval_every=2,
+               diagnostics=False, telemetry=tel)
+    tel.close()
+    assert obs_report.main([jsonl]) == 0
+
+    path = os.path.join(RESULTS, "BENCH_engine.json")
+    record = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            record = json.load(f)
+    record["telemetry"] = {
+        "policy": POLICY, "n": n, "rounds": TEL_ROUNDS,
+        "reps": TEL_REPS, "dynamics": "bernoulli",
+        "rps_off": max(reps_off), "rps_full": max(reps_full),
+        "reps_off": reps_off, "reps_full": reps_full,
+        "paired_off_over_full": paired,
+        "overhead_pct": overhead_pct,
+        "jsonl": TEL_JSONL, "trace": TEL_TRACE,
+        "note": "telemetry='full' fuses every registered metric into "
+                "one extra jitted dispatch per round whose handles ride "
+                "the pipelined round ledger readback (zero added host "
+                "syncs); overhead_pct is the paired per-rep median of "
+                "off/full - 1.  The JSONL/trace artifacts are a real "
+                "instrumented run (report CLI renders the JSONL)",
+    }
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    emit("engine_telemetry", 1e6 / max(reps_full),
+         f"n={n};rps_off={max(reps_off):.3f};"
+         f"rps_full={max(reps_full):.3f};"
+         f"overhead_pct={overhead_pct:.2f}")
+    return record
+
+
 DYN_PATHS = (("host_rng", "bernoulli_host"),
              ("device_bernoulli", "bernoulli"),
              ("device_markov", "markov"))
@@ -760,10 +859,10 @@ def run_dynamics():
         fl2 = dataclasses.replace(fl, dynamics=dyn)
         engine = FleetEngine(data, sim, fl2, fleet=Fleet(sim))
         engine.run(POLICY, rounds=WARMUP, diagnostics=False)  # jit warmup
-        t0 = time.time()
-        h = engine.run(POLICY, rounds=ROUNDS, eval_every=ROUNDS,
-                       diagnostics=False)
-        dt = time.time() - t0
+        with TRACER.span("bench_dynamics", path=label) as sp:
+            h = engine.run(POLICY, rounds=ROUNDS, eval_every=ROUNDS,
+                           diagnostics=False)
+        dt = sp.seconds
         paths[label] = {"dynamics": dyn, "rounds_per_sec": ROUNDS / dt,
                         "final_acc": h.acc[-1]}
         emit(f"engine_dyn_{label}", dt * 1e6 / ROUNDS,
@@ -802,5 +901,7 @@ if __name__ == "__main__":
         run_cohort()
     elif "--offload" in sys.argv[1:]:
         run_offload()
+    elif "--telemetry" in sys.argv[1:]:
+        run_telemetry()
     else:
         run()

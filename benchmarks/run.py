@@ -57,6 +57,10 @@ def main() -> None:
         # N=1M smoke)
         "engine_offload": types.SimpleNamespace(
             run=bench_engine.run_offload),
+        # telemetry="full" overhead (paired off/full) + real JSONL/trace
+        # artifacts rendered by the report CLI
+        "engine_telemetry": types.SimpleNamespace(
+            run=bench_engine.run_telemetry),
     }
     print("name,us_per_call,derived")
     failed = []

@@ -16,10 +16,17 @@ trained against the same poisoned fleet and the final accuracies are
 printed side by side — the weighted mean degrades, the robust rules
 hold.
 
+``--telemetry PATH`` instruments the headline FLUDE-at-40%% comparison:
+device metrics + host span traces are appended to ``PATH`` (JSONL, one
+event per line; a Perfetto trace lands next to it as
+``PATH + ".trace.json"``) and the per-run summary is rendered inline —
+the same output as ``python -m repro.obs.report PATH``.
+
     PYTHONPATH=src python examples/undependable_fleet.py
     PYTHONPATH=src python examples/undependable_fleet.py --scenario diurnal
     PYTHONPATH=src python examples/undependable_fleet.py --scenario all
     PYTHONPATH=src python examples/undependable_fleet.py --attack sign-flip-20
+    PYTHONPATH=src python examples/undependable_fleet.py --telemetry run.jsonl
 """
 import argparse
 import dataclasses
@@ -107,6 +114,28 @@ def attack_run(name):
               f"({h.acc[-1] / max(clean, 1e-9):5.1%} of clean)")
 
 
+def telemetry_run(path):
+    from repro import obs
+    from repro.obs import report as obs_report
+    n = 60
+    fl = FLConfig(num_clients=n, clients_per_round=15)
+    data = federated_classification(n, seed=1, margin=1.4, noise=1.3)
+    sim = SimConfig(num_clients=n, rounds=30, seed=0,
+                    undep_means=(0.4,) * 3)
+    engine = FleetEngine(data, sim, fl)
+    print("== FLUDE vs random at 40% undependability, instrumented ==")
+    print(f"  events -> {path}  trace -> {path}.trace.json")
+    for policy in ("random", "flude"):
+        tel = obs.Telemetry(level="full", jsonl=path,
+                            trace=path + ".trace.json")
+        engine.run(policy, telemetry=tel)
+        tel.close()
+    print()
+    for run in obs_report.parse_runs(path)[-2:]:
+        obs_report.render(run)
+        print()
+
+
 _ATTACKS = ("sign-flip-10", "sign-flip-20", "label-flip-20",
             "grad-scale-10")
 
@@ -121,8 +150,14 @@ def main():
                     choices=sorted(_ATTACKS) + ["all"],
                     help="run every registered agg_rule against a named "
                          "adversarial scenario and compare final accuracy")
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="instrument the FLUDE comparison: append "
+                         "telemetry JSONL to PATH, save a Perfetto trace "
+                         "and print the report summary")
     args = ap.parse_args()
-    if args.attack is not None:
+    if args.telemetry is not None:
+        telemetry_run(args.telemetry)
+    elif args.attack is not None:
         for name in (_ATTACKS if args.attack == "all" else [args.attack]):
             attack_run(name)
     elif args.scenario is None:

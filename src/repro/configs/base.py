@@ -329,8 +329,23 @@ class FLConfig:
     #   (the round close runs jitted on device; History rows are resolved
     #   from device scalars in arrival order).  ``time_budget`` runs
     #   resolve every round regardless (the budget check needs cum_time).
+    telemetry: Optional[str] = None
+    # ^ default device-metrics level for engine runs (repro.obs).  None
+    #   compiles telemetry out entirely — the round path is bit- and
+    #   dispatch-count-identical to an uninstrumented engine.  "basic"
+    #   fuses the cheap participation/loss/cache counters into one extra
+    #   jitted dispatch per round; "full" adds update/residual norms,
+    #   trust quantiles and the staleness histogram.  Either way metric
+    #   values ride the pipelined round ledger — zero added per-round
+    #   host syncs.  ``FleetEngine.run(telemetry=...)`` overrides per
+    #   run (a level string or a ``repro.obs.Telemetry`` session with
+    #   sinks/tracing attached).
 
     def __post_init__(self):
+        if self.telemetry not in (None, "basic", "full"):
+            raise ValueError(
+                f"FLConfig.telemetry must be None, 'basic' or 'full', "
+                f"got {self.telemetry!r}")
         if self.agg_impl not in ("xla", "pallas", "pallas_interpret"):
             raise ValueError(
                 f"FLConfig.agg_impl must be one of 'xla', 'pallas', "

@@ -21,8 +21,10 @@ round trip:
   async ``jax.device_put`` as soon as the cohort index is known.  No
   O(X·D) copy ever blocks the round that produced it — the only
   blocking reads are on handles whose device-to-host copies were issued
-  a full dispatch earlier (counted separately in :data:`STATS`, which
-  the transfer-count tests read).
+  a full dispatch earlier (counted in the stream's own
+  :class:`TransferStats` — exposed as ``FleetEngine.transfer_stats`` —
+  and mirrored into the deprecated process-wide :data:`STATS` aggregate
+  the historical transfer-count tests read).
 
 ``cache_offload="discard"`` additionally drops rows whose round stamp is
 more than ``cache_staleness_bound`` rounds old (the paper's cache is
@@ -67,6 +69,12 @@ class TransferStats:
         return dataclasses.asdict(self)
 
 
+# Deprecated process-wide aggregate.  Streams now carry their *own*
+# ``TransferStats`` (``CohortCacheStream(stats=...)`` — the engine owns
+# one per instance, exposed as ``FleetEngine.transfer_stats``), so
+# concurrent engines no longer clobber each other's counters; every
+# stream still mirrors its increments here so existing callers and the
+# historical transfer-count assertions keep working unchanged.
 STATS = TransferStats()
 
 
@@ -207,10 +215,14 @@ class CohortCacheStream:
     """
 
     def __init__(self, store: HostCacheStore, mesh=None,
-                 cohort_size: Optional[int] = None):
+                 cohort_size: Optional[int] = None,
+                 stats: Optional[TransferStats] = None):
         self.store = store
         self.mesh = mesh
         self.cohort_size = cohort_size
+        # per-stream counters (mirrored into the deprecated module-level
+        # aggregate ``STATS`` for back-compat)
+        self.stats = stats if stats is not None else TransferStats()
         self._pending = None
 
     def _sharding(self, tree):
@@ -221,17 +233,18 @@ class CohortCacheStream:
             lambda l: SP.cohort_sharding(self.mesh, np.asarray(l).ndim),
             tree)
 
-    @staticmethod
-    def _start_d2h(tree) -> None:
+    def _start_d2h(self, tree) -> None:
         for leaf in jax.tree.leaves(tree):
             if isinstance(leaf, jax.Array):
                 leaf.copy_to_host_async()
-        STATS.d2h_async += 1
-        STATS.d2h_bytes += _tree_bytes(tree)
+        nbytes = _tree_bytes(tree)
+        for s in (self.stats, STATS):
+            s.d2h_async += 1
+            s.d2h_bytes += nbytes
 
-    @staticmethod
-    def _read(tree):
+    def _read(self, tree):
         """Blocking read of handles whose copy was pre-issued."""
+        self.stats.pre_issued_reads += 1
         STATS.pre_issued_reads += 1
         return jax.tree.map(np.asarray, tree)
 
@@ -244,8 +257,10 @@ class CohortCacheStream:
         sh = self._sharding(block)
         put = jax.device_put(block) if sh is None \
             else jax.device_put(block, sh)
-        STATS.h2d_async += 1
-        STATS.h2d_bytes += _tree_bytes(block)
+        nbytes = _tree_bytes(block)
+        for s in (self.stats, STATS):
+            s.h2d_async += 1
+            s.h2d_bytes += nbytes
         return put
 
     def stage(self, idx, write, clear, block, stamps) -> None:

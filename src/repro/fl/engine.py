@@ -48,6 +48,7 @@ from repro.fl.simulator import Fleet, SimConfig, place_per_client
 from repro.fleet import (get_dynamics, make_adversary,  # registers processes
                          make_dynamics)
 from repro.launch.mesh import make_fleet_mesh
+from repro import obs
 from repro.sharding import partitioning as SP
 
 BIG = 1 << 20
@@ -366,6 +367,49 @@ class History:
     per_class_acc: Optional[np.ndarray] = None
     per_client_acc: Optional[np.ndarray] = None
     final_params: Any = None
+    # per-round device telemetry (FLConfig.telemetry / run(telemetry=..)):
+    # metric column -> list over rounds; None when telemetry is off
+    metrics: Optional[dict] = None
+
+    # optional ndarray attributes that round-trip through to_json (trust
+    # is attached dynamically by stateful robust rules)
+    _ARRAY_EXTRAS = ("part_count", "per_class_acc", "per_client_acc",
+                     "trust")
+
+    def to_json(self) -> dict:
+        """JSON-serializable trajectory dict (the golden-file format);
+        ``final_params`` is deliberately excluded."""
+        d = {"acc": [float(a) for a in self.acc],
+             "comm_mb": [float(c) for c in self.comm_mb],
+             "wall_clock": [float(t) for t in self.wall_clock],
+             "received": [int(r) for r in self.received],
+             "selected": [int(s) for s in self.selected],
+             "eval_mask": [bool(m) for m in self.eval_mask]}
+        for name in self._ARRAY_EXTRAS:
+            v = getattr(self, name, None)
+            if v is not None:
+                d[name] = np.asarray(v).tolist()
+        if self.metrics is not None:
+            d["metrics"] = {k: list(v) for k, v in self.metrics.items()}
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "History":
+        """Inverse of ``to_json``; tolerates pre-refactor golden dicts
+        (no ``eval_mask``/extras — the empty mask reads as all-True,
+        matching ``_evaluated``)."""
+        h = cls(acc=[float(a) for a in d.get("acc", ())],
+                comm_mb=[float(c) for c in d.get("comm_mb", ())],
+                wall_clock=[float(t) for t in d.get("wall_clock", ())],
+                received=[int(r) for r in d.get("received", ())],
+                selected=[int(s) for s in d.get("selected", ())],
+                eval_mask=[bool(m) for m in d.get("eval_mask", ())])
+        for name in cls._ARRAY_EXTRAS:
+            if d.get(name) is not None:
+                setattr(h, name, np.asarray(d[name]))
+        if d.get("metrics") is not None:
+            h.metrics = {k: list(v) for k, v in d["metrics"].items()}
+        return h
 
     def _evaluated(self):
         mask = self.eval_mask or [True] * len(self.acc)
@@ -385,6 +429,16 @@ class History:
             if a >= target:
                 return c
         return float("inf")
+
+
+def _metric_py(v):
+    """One resolved metric value -> plain python (scalar or list)."""
+    a = np.asarray(v)
+    if a.ndim:
+        return a.tolist()
+    if a.dtype == bool or np.issubdtype(a.dtype, np.integer):
+        return int(a)
+    return float(a)
 
 
 class _RoundLedger:
@@ -407,19 +461,23 @@ class _RoundLedger:
 
     def __init__(self, hist: History, model_mb: float,
                  round_deadline: float, progress: Optional[Callable],
-                 cohort_info: Optional[tuple] = None):
+                 n_rounds: int, cohort_info: Optional[tuple] = None,
+                 telemetry=None, tracer=None):
         self.hist = hist
         self.model_mb = model_mb
         self.round_deadline = round_deadline
         self.progress = progress
+        self.n_rounds = n_rounds
         self.cohort_info = cohort_info    # (policy_name, cohort_size)
+        self.telemetry = telemetry        # repro.obs.Telemetry | None
+        self.tracer = tracer if tracer is not None else obs.NULL_TRACER
         self.pending: List[tuple] = []
         self.cum_comm = 0.0
         self.cum_time = 0.0
         self.acc = float("nan")
 
     def push(self, rnd, evaluated, duration, capped, received, downloads,
-             selected, acc, overflow=None):
+             selected, acc, overflow=None, metrics=None):
         """Queue one round's device-scalar bookkeeping handles.
 
         ``overflow`` (compact-cohort rounds) is the device flag for
@@ -427,18 +485,26 @@ class _RoundLedger:
         back at resolve time, so under ``pipeline_depth`` > 1 a cohort
         overflow surfaces up to depth-1 rounds after it happened — the
         documented cost of keeping the check off the per-round hot path.
+
+        ``metrics`` (telemetry on) is the fused metrics dispatch's dict
+        of device scalars/vectors: it joins the same deferred read, so
+        telemetry adds handles to an existing host sync, never a new
+        one.
         """
         self.pending.append((rnd, evaluated, duration, capped, received,
-                             downloads, selected, acc, overflow))
+                             downloads, selected, acc, overflow,
+                             metrics))
 
     def resolve(self, keep: int = 0):
         """Read back (host-sync) all but the newest ``keep`` rounds."""
         while len(self.pending) > keep:
             (rnd, evaluated, duration, capped, received, downloads,
-             selected, acc_dev, overflow) = self.pending.pop(0)
-            duration, capped, received, downloads, selected, overflow = \
-                jax.device_get((duration, capped, received, downloads,
-                                selected, overflow))
+             selected, acc_dev, overflow, metrics) = self.pending.pop(0)
+            with self.tracer.span("ledger_resolve", round=rnd):
+                (duration, capped, received, downloads, selected,
+                 overflow, metrics) = jax.device_get(
+                    (duration, capped, received, downloads, selected,
+                     overflow, metrics))
             if overflow is not None and bool(overflow):
                 name, x = self.cohort_info or ("<unknown>", "?")
                 raise RuntimeError(
@@ -449,8 +515,9 @@ class _RoundLedger:
                     f"(or set it to None for the full scan).")
             self.cum_comm += (int(downloads) + int(received)) \
                 * self.model_mb
-            self.cum_time += self.round_deadline if bool(capped) \
+            billed = self.round_deadline if bool(capped) \
                 else float(duration)
+            self.cum_time += billed
             if evaluated:
                 self.acc = float(jax.device_get(acc_dev))
             hist = self.hist
@@ -460,7 +527,23 @@ class _RoundLedger:
             hist.wall_clock.append(self.cum_time)
             hist.received.append(int(received))
             hist.selected.append(int(selected))
-            if self.progress and rnd % 10 == 0:
+            if metrics is not None:
+                vals = {k: _metric_py(v) for k, v in metrics.items()}
+                if hist.metrics is None:
+                    hist.metrics = {}
+                for k, v in vals.items():
+                    hist.metrics.setdefault(k, []).append(v)
+                if self.telemetry is not None:
+                    self.telemetry.record_round({
+                        "round": rnd, "evaluated": evaluated,
+                        "acc": None if self.acc != self.acc else self.acc,
+                        "duration": billed, "comm_mb": self.cum_comm,
+                        "wall_clock": self.cum_time,
+                        "received": int(received),
+                        "downloads": int(downloads),
+                        "selected": int(selected), **vals})
+            if self.progress and (rnd % 10 == 0
+                                  or rnd == self.n_rounds - 1):
                 self.progress(rnd, self.acc, self.cum_comm, self.cum_time)
 
 
@@ -571,6 +654,9 @@ class FleetEngine:
         self._idx_fn = None
         self._expire_fn = None
         self._zeros_x = None
+        # per-engine transfer counters (the module-global
+        # ``cache_store.STATS`` stays as a deprecated mirror)
+        self._transfer_stats = core.TransferStats()
         if self.offload is not None:
             bound = fl_cfg.cache_staleness_bound \
                 if self.offload == "discard" else None
@@ -579,7 +665,12 @@ class FleetEngine:
                 staleness_bound=bound)
             self._cache_stream = core.CohortCacheStream(
                 self.cache_store, mesh=self.mesh,
-                cohort_size=self.cohort)
+                cohort_size=self.cohort, stats=self._transfer_stats)
+        # telemetry (repro.obs): fused metrics dispatches are memoized
+        # per (level, path); the run-scoped tracer is NULL when off, so
+        # instrumented seams cost one attribute lookup on default runs
+        self._metrics_fns = {}
+        self._tracer = obs.NULL_TRACER
 
     def _build_mesh(self, fl_cfg: FLConfig):
         if fl_cfg.mesh_shape is None:
@@ -677,6 +768,83 @@ class FleetEngine:
                 donate=self.donate, cohort_size=self.cohort,
                 cache_offload=self.offload)
         return self._server_steps[key]
+
+    # -- telemetry plumbing (repro.obs) -------------------------------------
+
+    @property
+    def transfer_stats(self) -> "core.TransferStats":
+        """This engine's cache-stream transfer counters (all zero when
+        no offload stream is configured).  Per-engine — unlike the
+        deprecated module-global ``cache_store.STATS`` aggregate, which
+        concurrent engines share."""
+        return self._transfer_stats
+
+    def _resolve_telemetry(self, arg):
+        """``run(telemetry=...)`` -> ``Telemetry | None``.
+
+        ``None`` defers to ``FLConfig.telemetry`` (a bare session at
+        that level, metrics land on ``History.metrics``); ``False``
+        forces telemetry off for this run; a level string builds a bare
+        session; a ``repro.obs.Telemetry`` is used as-is (sinks, trace
+        paths and profiler window included)."""
+        if arg is False:
+            return None
+        if arg is None:
+            lvl = self.fl_cfg.telemetry
+            return None if lvl is None else obs.Telemetry(level=lvl)
+        if isinstance(arg, str):
+            return obs.Telemetry(level=arg)
+        return arg
+
+    def _metrics_fn(self, level: str, uses_cache: bool,
+                    rows_bound: Optional[int] = None):
+        """Memoized fused metrics dispatch for the active round path:
+        ``(jitted fn, needed ctx keys)`` — ``(None, ())`` when nothing
+        applies.  The availability set advertises exactly what the
+        path produces, so registered metrics with unmet needs are never
+        traced.  ``rows_bound`` is the policy's static selection bound
+        on the full-scan path (rows there are the fleet-sized (N, ...)
+        stack): O(rows · D) metrics use it to gather the received rows
+        into a compact block before reducing."""
+        key = (level, self.cohort, self.offload, self._agg_stateful,
+               bool(uses_cache), rows_bound)
+        if key not in self._metrics_fns:
+            avail = {"selected", "distribute", "resume", "online",
+                     "received", "fail", "losses", "times", "progress",
+                     "stamp", "rnd", "rows", "rows_mask", "global"}
+            if self.cohort is not None:
+                avail.add("cohort_size")
+            if self._agg_stateful:
+                avail.add("rule_state")
+            if self.offload == "discard" and uses_cache:
+                avail.add("stamp_pre_expire")
+            static = {"num_clients": self.fl_cfg.num_clients,
+                      "cohort_size": self.cohort,
+                      "local_steps": self.sim_cfg.local_steps,
+                      "staleness_edges": obs.metrics.STALENESS_EDGES,
+                      "rows_bound": rows_bound}
+            self._metrics_fns[key] = obs.make_metrics_fn(
+                level, avail, static, mesh=self.mesh)
+        return self._metrics_fns[key]
+
+    def _metrics_dispatch(self, metrics_fn, m_keys, tracer, rnd,
+                          global_params, caches, rule_state,
+                          stamp_pre_expire, **cand):
+        """Issue the fused metrics dispatch.  Must be called *before*
+        the round's server step: with ``donate_buffers`` the step
+        consumes (invalidates) the pre-step global model and cache
+        metadata the reductions read."""
+        if metrics_fn is None:
+            return None
+        cand.update(progress=caches.progress, stamp=caches.round_stamp,
+                    rnd=rnd)
+        cand["global"] = global_params
+        if rule_state is not None:
+            cand["rule_state"] = rule_state
+        if stamp_pre_expire is not None:
+            cand["stamp_pre_expire"] = stamp_pre_expire
+        with tracer.span("metrics", round=rnd):
+            return metrics_fn({k: cand[k] for k in m_keys})
 
     # -- robust-aggregation state / adversary plumbing ----------------------
 
@@ -794,7 +962,7 @@ class FleetEngine:
     def run(self, policy: Union[str, Policy], rounds: Optional[int] = None,
             time_budget: Optional[float] = None, eval_every: int = 1,
             progress: Optional[Callable] = None,
-            diagnostics: bool = True) -> History:
+            diagnostics: bool = True, telemetry=None) -> History:
         """Run FL rounds.  ``time_budget`` (simulated seconds) caps the run
         by wall clock instead of round count — the paper's comparison
         regime: faster policies (shorter rounds) fit more rounds in the
@@ -812,7 +980,15 @@ class FleetEngine:
         > 1 keeps up to depth-1 rounds of bookkeeping in flight (History
         is read back at eval boundaries and run end), overlapping round
         k+1's dispatches with round k's device execution; trajectories
-        are bit-identical at every depth."""
+        are bit-identical at every depth.
+
+        ``telemetry`` (see ``_resolve_telemetry``): ``None`` defers to
+        ``FLConfig.telemetry``, a level string or ``repro.obs.Telemetry``
+        enables device metrics + host span tracing for this run, and
+        ``False`` forces it off.  Metric values ride the round ledger's
+        existing readback, so the trajectory is bit-identical (and the
+        per-round host-sync count unchanged) with telemetry on or
+        off."""
         sim_cfg, fl_cfg = self.sim_cfg, self.fl_cfg
         fleet = self._fleet if self._fleet is not None else Fleet(sim_cfg)
         if isinstance(policy, str):
@@ -840,12 +1016,25 @@ class FleetEngine:
         caches = self._fresh_caches(global_params)
 
         hist = History()
+        tel = self._resolve_telemetry(telemetry)
+        tracer = tel.tracer if tel is not None else obs.NULL_TRACER
+        self._tracer = tracer       # seams outside the loops (placement)
+        if tel is not None:
+            tel.open_run({"policy": policy.name,
+                          "num_clients": fl_cfg.num_clients,
+                          "rounds": n_rounds,
+                          "dynamics": fl_cfg.dynamics,
+                          "cohort_size": fl_cfg.cohort_size,
+                          "cache_offload": fl_cfg.cache_offload,
+                          "pipeline_depth": fl_cfg.pipeline_depth})
+            hist.metrics = {}
         rounds_loop = self._host_rounds \
             if get_dynamics(fl_cfg.dynamics).host_side \
             else self._device_rounds
-        state, global_params, caches = rounds_loop(
-            policy, state, fleet, hist, global_params, caches, rng,
-            n_rounds, time_budget, eval_every, progress)
+        with tracer.span("rounds"):
+            state, global_params, caches = rounds_loop(
+                policy, state, fleet, hist, global_params, caches, rng,
+                n_rounds, time_budget, eval_every, progress, tel)
 
         # a time_budget break can land between eval boundaries, leaving
         # the final booked round with a stale carried-forward (or NaN)
@@ -859,15 +1048,18 @@ class FleetEngine:
 
         # final diagnostics (paper Fig. 1(b)(c))
         if diagnostics:
-            hist.per_class_acc = np.asarray(CLF.clf_per_class_accuracy(
-                global_params, self._test_x, self._test_y,
-                self.data.num_classes))
-            pc = []
-            for i in range(min(fl_cfg.num_clients, self.data.x.shape[0])):
-                pc.append(float(self._acc_fn(
-                    global_params, jnp.asarray(self.data.x[i]),
-                    jnp.asarray(self.data.y[i]))))
-            hist.per_client_acc = np.asarray(pc)
+            with tracer.span("diagnostics"):
+                hist.per_class_acc = np.asarray(
+                    CLF.clf_per_class_accuracy(
+                        global_params, self._test_x, self._test_y,
+                        self.data.num_classes))
+                pc = []
+                for i in range(min(fl_cfg.num_clients,
+                                   self.data.x.shape[0])):
+                    pc.append(float(self._acc_fn(
+                        global_params, jnp.asarray(self.data.x[i]),
+                        jnp.asarray(self.data.y[i]))))
+                hist.per_client_acc = np.asarray(pc)
         for k, v in policy.history_extras(state).items():
             setattr(hist, k, v)
         if self._agg_stateful:
@@ -875,6 +1067,17 @@ class FleetEngine:
             # read-back happens once, at run end — rounds stay sync-free
             setattr(hist, "trust",
                     np.asarray(jax.device_get(self._last_rule_state)))
+        if tel is not None:
+            final_acc = hist.acc[-1] if hist.acc else None
+            tel.close_run({
+                "policy": policy.name, "rounds": len(hist.acc),
+                "final_acc": None if final_acc is None
+                or final_acc != final_acc else final_acc,
+                "comm_mb": hist.comm_mb[-1] if hist.comm_mb else 0.0,
+                "wall_clock": hist.wall_clock[-1] if hist.wall_clock
+                else 0.0,
+                "transfer_stats": self._transfer_stats.snapshot()})
+            self._tracer = obs.NULL_TRACER
         hist.final_params = global_params
         # final device-resident fleet state (stays sharded under the mesh;
         # the seam for multi-round pipelining / warm restarts)
@@ -960,7 +1163,7 @@ class FleetEngine:
         hist.wall_clock.append(cum_time)
         hist.received.append(int(received.sum()))
         hist.selected.append(int(selected.sum()))
-        if progress and rnd % 10 == 0:
+        if progress and (rnd % 10 == 0 or rnd == n_rounds - 1):
             progress(rnd, acc, cum_comm, cum_time)
         return cum_comm, cum_time, acc
 
@@ -968,12 +1171,16 @@ class FleetEngine:
 
     def _host_rounds(self, policy, state, fleet, hist, global_params,
                      caches, rng, n_rounds, time_budget, eval_every,
-                     progress):
+                     progress, tel=None):
         """The seed simulator's numpy round loop — draw-for-draw identical
         to the pre-dynamics engine, so the golden trajectories of every
         registered policy stay bit-identical."""
         sim_cfg, fl_cfg = self.sim_cfg, self.fl_cfg
         n_samples = self._n_samples
+        tracer = tel.tracer if tel is not None else obs.NULL_TRACER
+        metrics_fn, m_keys = (None, ()) if tel is None else \
+            self._metrics_fn(tel.level, policy.uses_cache,
+                             rows_bound=policy.selection_bound())
 
         # adaptive cache frequency (C3): steps between cache writes
         cache_every_np = np.clip(np.round(
@@ -997,8 +1204,9 @@ class FleetEngine:
                 break
             rng, k_sel = jax.random.split(rng)
             online = fleet.online_mask()
-            state, plan = policy.plan(
-                state, RoundObservation(rnd, online, caches), k_sel)
+            with tracer.span("plan", round=rnd):
+                state, plan = policy.plan(
+                    state, RoundObservation(rnd, online, caches), k_sel)
             self._validate_plan(plan)
             selected = np.asarray(plan.selected)
             distribute = np.asarray(plan.distribute)
@@ -1024,9 +1232,11 @@ class FleetEngine:
 
             # local training; the start state (fresh global vs cached
             # local) is selected on device inside the jitted trainer
-            final, cache_p, cached_steps, losses = self.trainer(
-                global_params, caches, self._put1(resume),
-                self._put1(steps_needed), self._put1(stop), cache_every)
+            with tracer.span("trainer", round=rnd):
+                final, cache_p, cached_steps, losses = self.trainer(
+                    global_params, caches, self._put1(resume),
+                    self._put1(steps_needed), self._put1(stop),
+                    cache_every)
 
             # timing + round termination
             success = selected & ~fail & (steps_needed > 0)
@@ -1042,26 +1252,54 @@ class FleetEngine:
             # one jitted call, params never leave the device.
             extra_w = ones_w if plan.agg_weights is None else \
                 self._put1(np.asarray(plan.agg_weights, np.float32))
-            out = server_step(
-                global_params, caches, final, cache_p, cached_steps,
-                self._put1(selected), self._put1(fail),
-                self._put1(received), self._put1(resume),
-                n_samples, extra_w, rnd, *self._step_extra(rule_state))
+            # fused metrics dispatch (telemetry on): reductions over the
+            # pre-step state — the legacy loop is host-synchronous, so
+            # values are read back within the round below
+            mx = self._metrics_dispatch(
+                metrics_fn, m_keys, tracer, rnd, global_params, caches,
+                rule_state, None, selected=selected, distribute=distribute,
+                resume=resume, online=online, received=received,
+                fail=fail, losses=losses, times=times, rows=final,
+                rows_mask=received)
+            with tracer.span("server_step", round=rnd):
+                out = server_step(
+                    global_params, caches, final, cache_p, cached_steps,
+                    self._put1(selected), self._put1(fail),
+                    self._put1(received), self._put1(resume),
+                    n_samples, extra_w, rnd,
+                    *self._step_extra(rule_state))
             if self._agg_stateful:
                 global_params, caches, rule_state = out
             else:
                 global_params, caches = out
 
-            state = policy.observe(
-                state, plan,
-                RoundReport(received=received, fail=fail,
-                            losses=np.asarray(losses), durations=times,
-                            duration=duration, rnd=rnd))
+            with tracer.span("observe", round=rnd):
+                state = policy.observe(
+                    state, plan,
+                    RoundReport(received=received, fail=fail,
+                                losses=np.asarray(losses),
+                                durations=times, duration=duration,
+                                rnd=rnd))
 
             cum_comm, cum_time, acc = self._book_round(
                 hist, rnd, n_rounds, eval_every, global_params,
                 distribute & online, received, selected, duration,
                 cum_comm, cum_time, acc, progress)
+            if tel is not None:
+                vals = {} if mx is None else \
+                    {k: _metric_py(v) for k, v in
+                     jax.device_get(mx).items()}
+                if vals:
+                    for k, v in vals.items():
+                        hist.metrics.setdefault(k, []).append(v)
+                tel.record_round({
+                    "round": rnd, "evaluated": bool(hist.eval_mask[-1]),
+                    "acc": None if acc != acc else acc,
+                    "duration": float(duration), "comm_mb": cum_comm,
+                    "wall_clock": cum_time,
+                    "received": int(received.sum()),
+                    "downloads": int((distribute & online).sum()),
+                    "selected": int(selected.sum()), **vals})
 
         self._last_rule_state = rule_state
         return state, global_params, caches
@@ -1125,8 +1363,9 @@ class FleetEngine:
         upload — the *draws* are device-resident either way."""
         if isinstance(arr, jax.Array):
             return arr
-        return self._put1(np.asarray(arr) if dtype is None
-                          else np.asarray(arr, dtype))
+        with self._tracer.span("place_per_client"):
+            return self._put1(np.asarray(arr) if dtype is None
+                              else np.asarray(arr, dtype))
 
     # -- cache-offload round plumbing ----------------------------------------
 
@@ -1186,7 +1425,7 @@ class FleetEngine:
 
     def _device_rounds(self, policy, state, fleet, hist, global_params,
                        caches, rng, n_rounds, time_budget, eval_every,
-                       progress):
+                       progress, tel=None):
         """Dynamics round loop: the round's availability/failure draw,
         workload, local training, timing model AND the quorum cut run on
         device (sharded over the client mesh) — process step, fused
@@ -1208,9 +1447,18 @@ class FleetEngine:
         cut_fn = self._round_cut(policy.waits_for_stragglers)
         cohort_info = None if self.cohort is None \
             else (policy.name, self.cohort)
+        tracer = tel.tracer if tel is not None else obs.NULL_TRACER
+        # cohort rows are already the compact (X, ...) block; the full
+        # scan advertises the policy's selection bound so O(rows · D)
+        # metrics gather received rows instead of reading all N
+        metrics_fn, m_keys = (None, ()) if tel is None else \
+            self._metrics_fn(tel.level, policy.uses_cache,
+                             rows_bound=None if self.cohort is not None
+                             else policy.selection_bound())
         ledger = _RoundLedger(hist, sim_cfg.model_mb,
-                              sim_cfg.round_deadline, progress,
-                              cohort_info=cohort_info)
+                              sim_cfg.round_deadline, progress, n_rounds,
+                              cohort_info=cohort_info, telemetry=tel,
+                              tracer=tracer)
 
         # independent dynamics key stream, reproducible per run
         dyn_base = jax.random.fold_in(jax.random.key(sim_cfg.seed),
@@ -1225,18 +1473,28 @@ class FleetEngine:
                 ledger.resolve()
                 if ledger.cum_time >= time_budget:
                     break
+            if tel is not None:
+                tel.maybe_profile(rnd)
             rng, k_sel = jax.random.split(rng)
-            fstate, draw = step_fn(fstate,
-                                   jax.random.fold_in(dyn_base, rnd))
+            with tracer.span("dynamics_step", round=rnd):
+                fstate, draw = step_fn(fstate,
+                                       jax.random.fold_in(dyn_base, rnd))
+            stamp_pre_expire = None
             if self.offload == "discard" and policy.uses_cache:
                 # device half of the discard bound: expire stale cache
                 # metadata *before* planning reads it, so the planner
                 # never resumes a row the host store prunes (the store
-                # prunes with the same bound at write-back drain)
-                caches = self._expire_fn_jit()(caches, rnd)
-            state, plan = policy.plan(
-                state, RoundObservation(rnd, draw.online, caches,
-                                        draw=draw), k_sel)
+                # prunes with the same bound at write-back drain).  The
+                # pre-expiry stamps stay live for the metrics dispatch
+                # (cache_expired counts; the expire jit donates nothing)
+                if metrics_fn is not None:
+                    stamp_pre_expire = caches.round_stamp
+                with tracer.span("cache_expire", round=rnd):
+                    caches = self._expire_fn_jit()(caches, rnd)
+            with tracer.span("plan", round=rnd):
+                state, plan = policy.plan(
+                    state, RoundObservation(rnd, draw.online, caches,
+                                            draw=draw), k_sel)
             self._validate_plan(plan)
             sel_d = self._from_plan(plan.selected)
             dist_d = self._from_plan(plan.distribute)
@@ -1249,24 +1507,35 @@ class FleetEngine:
             if self.cohort is None:
                 # fused round body: workload + failure/interruption +
                 # masked local training + per-device timing, one dispatch
-                (final, cache_p, cached_steps, losses, steps_needed, fail,
-                 success, times) = trainer(global_params, caches, draw,
-                                           sel_d, dist_d, res_d,
-                                           base_steps, cache_every)
+                with tracer.span("trainer", round=rnd):
+                    (final, cache_p, cached_steps, losses, steps_needed,
+                     fail, success, times) = trainer(
+                        global_params, caches, draw, sel_d, dist_d,
+                        res_d, base_steps, cache_every)
 
                 # round termination on device: the cut is a device scalar
                 # and the receive mask stays sharded; deadline-capped
                 # rounds come back as a flag so the ledger bills the
                 # exact f64 deadline.  The ledger counts ride the same
                 # dispatch (``with_counts``).
-                (t_cut, received, capped, recv_n, down_n,
-                 sel_n) = cut_fn(times, plan.quorum, success,
-                                 draw.online, dist_d, sel_d)
+                with tracer.span("round_cut", round=rnd):
+                    (t_cut, received, capped, recv_n, down_n,
+                     sel_n) = cut_fn(times, plan.quorum, success,
+                                     draw.online, dist_d, sel_d)
                 overflow = None
-                out = server_step(
-                    global_params, caches, final, cache_p, cached_steps,
-                    sel_d, fail, received, res_d, n_samples, extra_w, rnd,
-                    *self._step_extra(rule_state))
+                mx = self._metrics_dispatch(
+                    metrics_fn, m_keys, tracer, rnd, global_params,
+                    caches, rule_state, stamp_pre_expire,
+                    selected=sel_d, distribute=dist_d, resume=res_d,
+                    online=draw.online, received=received, fail=fail,
+                    losses=losses, times=times, rows=final,
+                    rows_mask=received)
+                with tracer.span("server_step", round=rnd):
+                    out = server_step(
+                        global_params, caches, final, cache_p,
+                        cached_steps, sel_d, fail, received, res_d,
+                        n_samples, extra_w, rnd,
+                        *self._step_extra(rule_state))
                 if self._agg_stateful:
                     global_params, caches, rule_state = out
                 else:
@@ -1278,21 +1547,33 @@ class FleetEngine:
                 # compact cohort: the trainer gathers the selected rows
                 # into (X, ...) blocks on device and hands back scattered
                 # (N,) report views; cut + aggregation run over X rows
-                (final, cache_p, cached_steps, _losses_x, _steps_x, fail,
-                 success, times, idx, overflow, losses_n, fail_n,
-                 times_n) = trainer(global_params, caches, draw, sel_d,
-                                    dist_d, res_d, base_steps,
-                                    cache_every)
-                (t_cut, _received_x, received, capped, recv_n, down_n,
-                 sel_n) = cut_fn(times, plan.quorum, success, idx,
-                                 draw.online, dist_d, sel_d)
+                with tracer.span("trainer", round=rnd):
+                    (final, cache_p, cached_steps, _losses_x, _steps_x,
+                     fail, success, times, idx, overflow, losses_n,
+                     fail_n, times_n) = trainer(
+                        global_params, caches, draw, sel_d, dist_d,
+                        res_d, base_steps, cache_every)
+                with tracer.span("round_cut", round=rnd):
+                    (t_cut, _received_x, received, capped, recv_n,
+                     down_n, sel_n) = cut_fn(times, plan.quorum, success,
+                                             idx, draw.online, dist_d,
+                                             sel_d)
                 # observability seam (tests / debugging): the last
                 # round's device cohort index, still sharded
                 self._last_cohort_idx = idx
-                out = server_step(
-                    global_params, caches, final, cache_p, cached_steps,
-                    idx, sel_d, fail, _received_x, res_d, n_samples,
-                    extra_w, rnd, *self._step_extra(rule_state))
+                mx = self._metrics_dispatch(
+                    metrics_fn, m_keys, tracer, rnd, global_params,
+                    caches, rule_state, stamp_pre_expire,
+                    selected=sel_d, distribute=dist_d, resume=res_d,
+                    online=draw.online, received=received, fail=fail_n,
+                    losses=losses_n, times=times_n, rows=final,
+                    rows_mask=_received_x)
+                with tracer.span("server_step", round=rnd):
+                    out = server_step(
+                        global_params, caches, final, cache_p,
+                        cached_steps, idx, sel_d, fail, _received_x,
+                        res_d, n_samples, extra_w, rnd,
+                        *self._step_extra(rule_state))
                 if self._agg_stateful:
                     global_params, caches, rule_state = out
                 else:
@@ -1311,21 +1592,34 @@ class FleetEngine:
                 # bit-identical to the resident path
                 idx, overflow = self._offload_idx_fn()(sel_d)
                 if policy.uses_cache:
-                    cache_x = self._cache_stream.fetch(idx, rnd)
+                    with tracer.span("cache_fetch", round=rnd):
+                        cache_x = self._cache_stream.fetch(idx, rnd)
                 else:
                     cache_x = self._zero_cohort_block()
-                (final, cache_p, cached_steps, _losses_x, _steps_x, fail,
-                 success, times, losses_n, fail_n, times_n) = trainer(
-                    global_params, caches, cache_x, idx, draw, sel_d,
-                    dist_d, res_d, base_steps, cache_every)
-                (t_cut, _received_x, received, capped, recv_n, down_n,
-                 sel_n) = cut_fn(times, plan.quorum, success, idx,
-                                 draw.online, dist_d, sel_d)
+                with tracer.span("trainer", round=rnd):
+                    (final, cache_p, cached_steps, _losses_x, _steps_x,
+                     fail, success, times, losses_n, fail_n,
+                     times_n) = trainer(
+                        global_params, caches, cache_x, idx, draw, sel_d,
+                        dist_d, res_d, base_steps, cache_every)
+                with tracer.span("round_cut", round=rnd):
+                    (t_cut, _received_x, received, capped, recv_n,
+                     down_n, sel_n) = cut_fn(times, plan.quorum, success,
+                                             idx, draw.online, dist_d,
+                                             sel_d)
                 self._last_cohort_idx = idx
-                out = server_step(
-                    global_params, caches, final, cached_steps, idx,
-                    sel_d, fail, _received_x, res_d, n_samples, extra_w,
-                    rnd, *self._step_extra(rule_state))
+                mx = self._metrics_dispatch(
+                    metrics_fn, m_keys, tracer, rnd, global_params,
+                    caches, rule_state, stamp_pre_expire,
+                    selected=sel_d, distribute=dist_d, resume=res_d,
+                    online=draw.online, received=received, fail=fail_n,
+                    losses=losses_n, times=times_n, rows=final,
+                    rows_mask=_received_x)
+                with tracer.span("server_step", round=rnd):
+                    out = server_step(
+                        global_params, caches, final, cached_steps, idx,
+                        sel_d, fail, _received_x, res_d, n_samples,
+                        extra_w, rnd, *self._step_extra(rule_state))
                 if self._agg_stateful:
                     (global_params, caches, write_x, stamp_x,
                      rule_state) = out
@@ -1334,19 +1628,26 @@ class FleetEngine:
                 if policy.uses_cache:
                     # park the round's write-back: async copies start
                     # now, nothing blocks until next round's fetch
-                    self._cache_stream.stage(idx, write_x, _received_x,
-                                             cache_p, stamp_x)
+                    with tracer.span("cache_stage", round=rnd):
+                        self._cache_stream.stage(idx, write_x,
+                                                 _received_x, cache_p,
+                                                 stamp_x)
                 report = RoundReport(received=received, fail=fail_n,
                                      losses=losses_n, durations=times_n,
                                      duration=t_cut, rnd=rnd)
 
-            state = policy.observe(state, plan, report)
+            with tracer.span("observe", round=rnd):
+                state = policy.observe(state, plan, report)
 
             evaluated = rnd % eval_every == 0 or rnd == n_rounds - 1
-            acc_dev = self._acc_fn(global_params, self._test_x,
-                                   self._test_y) if evaluated else None
+            acc_dev = None
+            if evaluated:
+                with tracer.span("eval", round=rnd):
+                    acc_dev = self._acc_fn(global_params, self._test_x,
+                                           self._test_y)
             ledger.push(rnd, evaluated, t_cut, capped, recv_n,
-                        down_n, sel_n, acc_dev, overflow=overflow)
+                        down_n, sel_n, acc_dev, overflow=overflow,
+                        metrics=mx)
             if progress and rnd % 10 == 0:
                 ledger.resolve()        # live ticks resolve on schedule
             else:
@@ -1357,7 +1658,8 @@ class FleetEngine:
             # apply the last round's parked write-back so the host store
             # reflects the final cache state (its copies have been in
             # flight since that round's server step was dispatched)
-            self._cache_stream.flush(n_rounds)
+            with tracer.span("cache_flush"):
+                self._cache_stream.flush(n_rounds)
         # pipelining seam: the process state (and last draw) stay
         # device-resident between runs, like the caches
         self._last_fleet_state = fstate

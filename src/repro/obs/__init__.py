@@ -1,0 +1,19 @@
+"""Observability for the fleet round path (see DESIGN notes in each
+module):
+
+* ``repro.obs.metrics`` — ``@register_metric`` device-metric registry;
+  per-round reductions fused into one extra jitted dispatch that rides
+  the pipelined round ledger (zero added host syncs).
+* ``repro.obs.trace`` — host span tracer with Chrome/Perfetto
+  ``trace_event`` export.
+* ``repro.obs.sink`` — JSONL / in-memory event sinks.
+* ``repro.obs.telemetry`` — the ``Telemetry`` session object
+  ``FleetEngine.run(telemetry=...)`` consumes.
+* ``repro.obs.report`` — ``python -m repro.obs.report run.jsonl`` run
+  summary CLI.
+"""
+from repro.obs.metrics import (available_metrics, make_metrics_fn,
+                               metrics_for, register_metric)
+from repro.obs.sink import JsonlSink, MemorySink, TeeSink
+from repro.obs.telemetry import Telemetry
+from repro.obs.trace import NULL_TRACER, NullTracer, Tracer

@@ -1,0 +1,164 @@
+"""Host span tracing for the fleet round path.
+
+The engine's per-round host work is a short sequence of *dispatch* seams
+— plan, fused trainer, round cut, server step, ledger resolve, cache
+stream, eval — and :class:`Tracer` wraps each in a lightweight span
+(``time.perf_counter`` pairs, one appended tuple per span).  Because the
+round path is asynchronous, a span measures the *host-side* cost of its
+seam (argument prep + dispatch + any blocking read it performs), which
+is exactly the budget the zero-per-round-host-sync invariant protects;
+device-side compute is captured separately via the optional
+``jax.profiler`` window (see :class:`repro.obs.telemetry.Telemetry`).
+
+Spans export as Chrome ``trace_event`` JSON (``save``) loadable in
+Perfetto / ``chrome://tracing``, and aggregate into a per-name summary
+(``summary``) that the report CLI renders as the round-time breakdown.
+
+``NULL_TRACER`` is the disabled path: ``span`` returns a shared no-op
+context manager, so instrumented code needs no branches and the default
+(telemetry off) path pays a single attribute lookup per seam.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+
+class Span:
+    """One timed section; also usable as ``with tracer.span(..) as sp``
+    for its ``seconds`` reading (the benchmark clock)."""
+
+    __slots__ = ("_tracer", "name", "args", "t0", "t1")
+
+    def __init__(self, tracer: "Tracer", name: str, args: Optional[dict]):
+        self._tracer = tracer
+        self.name = name
+        self.args = args
+        self.t0 = 0.0
+        self.t1 = 0.0
+
+    def __enter__(self) -> "Span":
+        self.t0 = self._tracer._clock()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.t1 = self._tracer._clock()
+        self._tracer._record(self)
+
+    @property
+    def seconds(self) -> float:
+        return self.t1 - self.t0
+
+
+class Tracer:
+    """Append-only span/instant/counter recorder with a perf_counter
+    clock; timestamps are relative to tracer construction (reset)."""
+
+    def __init__(self):
+        self._clock = time.perf_counter
+        self.reset()
+
+    def reset(self) -> None:
+        self._epoch = self._clock()
+        # (name, ts_us, dur_us, args) — dur_us None for instants,
+        # args holding values for counters (ph "C")
+        self.events: List[Tuple[str, float, Optional[float], Any]] = []
+        self._counters: set = set()
+
+    # -- recording ----------------------------------------------------------
+
+    def span(self, name: str, **args) -> Span:
+        return Span(self, name, args or None)
+
+    def _record(self, sp: Span) -> None:
+        self.events.append((sp.name, (sp.t0 - self._epoch) * 1e6,
+                            (sp.t1 - sp.t0) * 1e6, sp.args))
+
+    def instant(self, name: str, **args) -> None:
+        self.events.append((name, (self._clock() - self._epoch) * 1e6,
+                            None, args or None))
+
+    def counter(self, name: str, **values) -> None:
+        self._counters.add(name)
+        self.events.append((name, (self._clock() - self._epoch) * 1e6,
+                            None, values))
+
+    # -- aggregation / export -----------------------------------------------
+
+    def summary(self) -> Dict[str, dict]:
+        """Per-span-name aggregate: count, total/mean/max seconds."""
+        out: Dict[str, dict] = {}
+        for name, _ts, dur, _args in self.events:
+            if dur is None:
+                continue
+            s = out.setdefault(name, {"count": 0, "total_s": 0.0,
+                                      "max_s": 0.0})
+            s["count"] += 1
+            s["total_s"] += dur * 1e-6
+            s["max_s"] = max(s["max_s"], dur * 1e-6)
+        for s in out.values():
+            s["mean_s"] = s["total_s"] / s["count"]
+        return out
+
+    def to_chrome(self) -> dict:
+        """Chrome ``trace_event`` JSON (Perfetto-loadable)."""
+        evs = [{"name": "process_name", "ph": "M", "pid": 0, "tid": 0,
+                "args": {"name": "fleet-engine host"}}]
+        for name, ts, dur, args in self.events:
+            ev = {"name": name, "pid": 0, "tid": 0, "ts": ts, "cat": "fl"}
+            if name in self._counters:
+                ev.update(ph="C", args=args or {})
+            elif dur is None:
+                ev.update(ph="i", s="t")
+                if args:
+                    ev["args"] = args
+            else:
+                ev.update(ph="X", dur=dur)
+                if args:
+                    ev["args"] = args
+            evs.append(ev)
+        return {"traceEvents": evs, "displayTimeUnit": "ms"}
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_chrome(), f)
+
+
+class _NullSpan:
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return None
+
+    seconds = 0.0
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class NullTracer:
+    """Disabled tracer: every operation is a no-op (shared span)."""
+
+    events: List = []
+
+    def span(self, name: str, **args) -> _NullSpan:
+        return _NULL_SPAN
+
+    def instant(self, name: str, **args) -> None:
+        pass
+
+    def counter(self, name: str, **values) -> None:
+        pass
+
+    def summary(self) -> dict:
+        return {}
+
+    def reset(self) -> None:
+        pass
+
+
+NULL_TRACER = NullTracer()

@@ -290,15 +290,16 @@ def golden_setup(golden):
 @pytest.mark.parametrize("policy", BUILTINS)
 def test_matches_prerefactor_trajectory(golden, golden_setup, policy):
     """Each ported policy reproduces the dict-era runner's History on a
-    fixed seed (golden recorded from the pre-refactor run_fl)."""
+    fixed seed (golden recorded from the pre-refactor run_fl; loaded
+    through ``History.from_json`` — the golden-file format)."""
     sim, fl, data = golden_setup
-    ref = golden["policies"][policy]
+    ref = History.from_json(golden["policies"][policy])
     h = run_fl(policy, data, sim, fl)
-    np.testing.assert_allclose(h.acc, ref["acc"], atol=1e-6)
-    np.testing.assert_allclose(h.wall_clock, ref["wall_clock"], atol=1e-5)
-    np.testing.assert_allclose(h.comm_mb, ref["comm_mb"], atol=1e-5)
-    assert h.received == ref["received"]
-    assert h.selected == ref["selected"]
+    np.testing.assert_allclose(h.acc, ref.acc, atol=1e-6)
+    np.testing.assert_allclose(h.wall_clock, ref.wall_clock, atol=1e-5)
+    np.testing.assert_allclose(h.comm_mb, ref.comm_mb, atol=1e-5)
+    assert h.received == ref.received
+    assert h.selected == ref.selected
 
 
 # ---------------------------------------------------------------------------
@@ -310,13 +311,13 @@ def test_mifa_matches_golden_trajectory(golden_setup):
     as the six pre-refactor policies)."""
     sim, fl, data = golden_setup
     with open(GOLDEN_MIFA) as f:
-        ref = json.load(f)["history"]
+        ref = History.from_json(json.load(f)["history"])
     h = run_fl("mifa", data, sim, fl)
-    np.testing.assert_allclose(h.acc, ref["acc"], atol=1e-6)
-    np.testing.assert_allclose(h.wall_clock, ref["wall_clock"], atol=1e-5)
-    np.testing.assert_allclose(h.comm_mb, ref["comm_mb"], atol=1e-5)
-    assert h.received == ref["received"]
-    assert h.selected == ref["selected"]
+    np.testing.assert_allclose(h.acc, ref.acc, atol=1e-6)
+    np.testing.assert_allclose(h.wall_clock, ref.wall_clock, atol=1e-5)
+    np.testing.assert_allclose(h.comm_mb, ref.comm_mb, atol=1e-5)
+    assert h.received == ref.received
+    assert h.selected == ref.selected
 
 
 def test_mifa_memorizes_and_undiscounts():

@@ -202,7 +202,22 @@ def test_pipelined_progress_callback_sees_each_round():
     FleetEngine(data, sim, fl).run(
         "flude", diagnostics=False,
         progress=lambda rnd, acc, comm, time: seen.append(rnd))
-    assert seen == [0]          # rnd % 10 == 0 ticks, resolved in order
+    # rnd % 10 == 0 ticks plus the final round (regression: the last
+    # round used to be dropped whenever (rounds-1) % 10 != 0)
+    assert seen == [0, 2]
+
+
+@pytest.mark.parametrize("dynamics", ["bernoulli_host", "bernoulli"])
+def test_progress_callback_always_ticks_final_round(dynamics):
+    """Both round loops report the final round to ``progress`` even when
+    it falls off the every-10-rounds cadence, so a live ticker ends on
+    the run's true final accuracy/cost row."""
+    data, sim, fl = _setup(rounds=15, dynamics=dynamics)
+    seen = []
+    FleetEngine(data, sim, fl).run(
+        "random", diagnostics=False,
+        progress=lambda rnd, acc, comm, time: seen.append(rnd))
+    assert seen == [0, 10, 14]
 
 
 # ---------------------------------------------------------------------------
