@@ -596,7 +596,6 @@ def run_offload():
     model is ~70 GB at N=1M, so the host store is what makes the run
     fit; the recorded residency split shows device cache bytes tracking
     X, not N.  Merged into BENCH_engine.json under "offload"."""
-    from repro.core import cache_store as CS
     n = N_MESH
     sim, fl, data = _setup(n)
     sim = dataclasses.replace(
@@ -646,11 +645,11 @@ def run_offload():
                  "rounds_per_sec": max(reps[k]),
                  "reps_rounds_per_sec": reps[k]}
         if engine.fl_cfg.cache_offload is not None:
-            CS.STATS.reset()
+            engine.transfer_stats.reset()
             engine.run(POLICY, rounds=STATS_ROUNDS,
                        eval_every=10 * STATS_ROUNDS, diagnostics=False)
             point["transfer_stats_rounds"] = STATS_ROUNDS
-            point["transfer_stats"] = CS.STATS.snapshot()
+            point["transfer_stats"] = engine.transfer_stats.snapshot()
         mem = engine.server_step_memory()
         point["cache_device_bytes"] = mem["cache_device_bytes"]
         point["cache_host_bytes"] = mem["cache_host_bytes"]
@@ -689,7 +688,7 @@ def run_offload():
     engine = FleetEngine(_vec_classification(N_SMOKE, seed=8), smoke_sim,
                          smoke_fl, fleet=Fleet(smoke_sim))
     engine.run(POLICY, rounds=WARMUP, diagnostics=False)      # jit warmup
-    CS.STATS.reset()
+    engine.transfer_stats.reset()
     with TRACER.span("bench_offload_smoke", n=N_SMOKE) as sp:
         engine.run(POLICY, rounds=SMOKE_ROUNDS,
                    eval_every=10 * SMOKE_ROUNDS, diagnostics=False)
@@ -708,7 +707,7 @@ def run_offload():
              "cache_host_bytes": mem["cache_host_bytes"],
              "server_step_peak_live_bytes": mem["peak_live_bytes"],
              "live_device_bytes": live,
-             "transfer_stats": CS.STATS.snapshot()}
+             "transfer_stats": engine.transfer_stats.snapshot()}
     emit("engine_offload_smoke", dt * 1e6 / SMOKE_ROUNDS,
          f"n={N_SMOKE};x={X_SMOKE};rps={SMOKE_ROUNDS / dt:.3f};"
          f"cache_dev={mem['cache_device_bytes']};"

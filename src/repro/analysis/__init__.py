@@ -1,0 +1,19 @@
+"""Static analysis of the round path (ISSUE 10).
+
+Two passes over the same contracts:
+
+* :mod:`repro.analysis.audit` — the invariant auditor: lowers the
+  engine's jitted round-path dispatches and statically verifies the
+  zero-sync / donation / dtype / sharding / transfer-ceiling contracts
+  against the post-SPMD HLO (``python -m repro.analysis.audit``).
+* :mod:`repro.analysis.lint` — the repo lint: stdlib-AST rules for the
+  same contracts at the source level
+  (``python -m repro.analysis.lint src/``).
+* :mod:`repro.analysis.runtime` — the ``FLConfig.debug_checks``
+  sanitizers (checkify round guards + recompilation detector).
+
+Submodules are intentionally not imported here: ``lint``/``hlo_checks``
+are stdlib-light CLI entry points (importing them from the package
+would trip runpy's double-import warning under ``python -m``), and
+``audit``/``runtime`` pull in jax + the engine.
+"""

@@ -1,0 +1,277 @@
+"""Static contract checks over post-SPMD HLO of the round path.
+
+Each check takes the dispatch name (for actionable messages) plus the
+compiled executable's HLO text — ``compiled.as_text()`` after SPMD
+partitioning, the same artifact ``roofline/hlo.py`` consumes — and
+returns a list of :class:`Finding`.  The auditor (``analysis/audit.py``)
+decides which checks apply to which dispatch; this module knows only
+how to read the HLO.
+
+The five round-path contracts (ISSUE 10 / README "Static analysis &
+invariants"):
+
+1. **zero-sync** — no host callbacks, infeed/outfeed, host transfers or
+   host-memory-space copies inside a round dispatch
+   (:func:`check_no_host_ops`);
+2. **donation** — donated inputs actually alias into outputs in the
+   compiled executable (:func:`check_donation`);
+3. **dtype** — no f64/c128 leakage, and every floating-point psum
+   (``all-reduce``) accumulates in f32 (:func:`check_no_f64`,
+   :func:`check_psum_dtype`);
+4. **sharding** — fleet-shaped (N,)/(X,) operands are partitioned on the
+   ``("clients",)`` mesh axis, not silently replicated
+   (:func:`check_input_shardings`, :func:`check_partition_count`);
+5. **transfer ceiling** — static per-round bound on the cache stream's
+   host transfers (lives in ``analysis/audit.py``: it is a property of
+   the engine, not of one HLO module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.roofline.hlo import Computation, Instr, parse_hlo
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One violated contract, tied to a named round-path dispatch."""
+    dispatch: str
+    contract: str        # "host-sync" | "donation" | "dtype" | "sharding" | "transfer"
+    message: str
+
+    def __str__(self) -> str:
+        return f"[{self.contract}] {self.dispatch}: {self.message}"
+
+
+def _instrs(comps: Dict[str, Computation]) -> Iterable[Tuple[str, Instr]]:
+    """All instructions, each computation visited once (``__entry__`` is
+    an alias of the real entry computation — skip the duplicate key)."""
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        for ins in comp.instrs:
+            yield name, ins
+
+
+# ---------------------------------------------------------------------------
+# Contract 1: no host round-trips inside the round path
+# ---------------------------------------------------------------------------
+
+#: opcodes that move data to/from the host (or another process) and
+#: therefore stall the device round pipeline
+_HOST_OPCODES = frozenset({
+    "infeed", "outfeed", "send", "send-done", "recv", "recv-done",
+})
+
+_CALL_TARGET_RE = re.compile(r'custom_call_target="([^"]+)"')
+
+
+def _is_host_callback_target(target: str) -> bool:
+    # jax host callbacks lower to custom-calls whose target names the
+    # python trampoline (xla_python_cpu_callback, xla_ffi_python_*_callback,
+    # ...); plain kernels (lapack_*, blas_*, Sharding, topk, ...) don't
+    return "callback" in target or target in ("SendToHost", "RecvFromHost")
+
+
+def check_no_host_ops(dispatch: str, text: str,
+                      comps: Optional[Dict[str, Computation]] = None,
+                      ) -> List[Finding]:
+    """Contract 1: the compiled round dispatch must not contain host
+    callbacks, infeed/outfeed, cross-host sends or host-memory-space
+    copies — any of these makes the "zero per-round host syncs" claim
+    false at the XLA level, whatever the python code looks like."""
+    comps = parse_hlo(text) if comps is None else comps
+    findings: List[Finding] = []
+    for comp_name, ins in _instrs(comps):
+        if ins.opcode in _HOST_OPCODES:
+            findings.append(Finding(
+                dispatch, "host-sync",
+                f"host-transfer op '{ins.opcode}' ({ins.name} in "
+                f"{comp_name}) compiled into the round path"))
+        elif ins.opcode == "custom-call":
+            m = _CALL_TARGET_RE.search(ins.rest)
+            if m and _is_host_callback_target(m.group(1)):
+                findings.append(Finding(
+                    dispatch, "host-sync",
+                    f"host callback custom-call "
+                    f"(target={m.group(1)!r}, {ins.name} in {comp_name}) "
+                    f"— a python round-trip inside the jitted round "
+                    f"path"))
+        elif "S(5)" in ins.type_str:
+            # layout memory-space annotation 5 == host memory: a copy
+            # staged through host RAM, i.e. a hidden sync transfer
+            findings.append(Finding(
+                dispatch, "host-sync",
+                f"host-memory-space buffer in '{ins.opcode}' "
+                f"({ins.name} in {comp_name}: {ins.type_str})"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Contract 2: donation produces real input-output aliases
+# ---------------------------------------------------------------------------
+
+_ALIAS_ENTRY_RE = re.compile(
+    r"\((\d+),\s*\{[\d,\s]*\},\s*(?:may|must)-alias\)")
+
+
+def _alias_block(text: str) -> str:
+    """The brace-balanced body of ``input_output_alias={...}`` in the
+    HloModule header ("" if absent).  The block nests braces
+    (``{ {0}: (0, {}, may-alias) }``), so this is a depth scan, not a
+    regex."""
+    marker = "input_output_alias={"
+    start = text.find(marker)
+    if start < 0:
+        return ""
+    i = start + len(marker)
+    depth = 1
+    for j in range(i, min(len(text), i + 100_000)):
+        c = text[j]
+        if c == "{":
+            depth += 1
+        elif c == "}":
+            depth -= 1
+            if depth == 0:
+                return text[i:j]
+    return ""
+
+
+def count_aliases(text: str) -> int:
+    """Number of input-output alias entries in the HloModule header."""
+    return len(_ALIAS_ENTRY_RE.findall(_alias_block(text)))
+
+
+def check_donation(dispatch: str, text: str, min_aliases: int
+                   ) -> List[Finding]:
+    """Contract 2: a dispatch built with ``donate_argnums`` must show at
+    least ``min_aliases`` input-output aliases in the compiled module —
+    a donation that XLA silently declined (shape/dtype drift, an extra
+    live use) doubles the steady-state fleet-state footprint without
+    any runtime error."""
+    n = count_aliases(text)
+    if n < min_aliases:
+        return [Finding(
+            dispatch, "donation",
+            f"expected >= {min_aliases} donated input-output aliases in "
+            f"the compiled executable, found {n} — a donated buffer is "
+            f"not being aliased (check for shape/dtype drift between "
+            f"the donated input and its output)")]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# Contract 3: dtype hygiene (no f64, fp32 psum)
+# ---------------------------------------------------------------------------
+
+_WIDE_RE = re.compile(r"\b(f64|c128)\[")
+
+
+def check_no_f64(dispatch: str, text: str,
+                 comps: Optional[Dict[str, Computation]] = None,
+                 ) -> List[Finding]:
+    """Contract 3a: no f64/c128 anywhere in the round dispatch.  The
+    round path is an f32 system (f64 bookkeeping lives on the host
+    ledger); one leaked promotion doubles bandwidth on the N-sized
+    hot arrays."""
+    comps = parse_hlo(text) if comps is None else comps
+    offenders = [
+        f"{ins.name} ({ins.opcode}: {ins.type_str})"
+        for _, ins in _instrs(comps)
+        if _WIDE_RE.search(ins.type_str)
+    ]
+    if offenders:
+        shown = ", ".join(offenders[:4])
+        more = f" (+{len(offenders) - 4} more)" if len(offenders) > 4 else ""
+        return [Finding(
+            dispatch, "dtype",
+            f"f64/c128 values compiled into the round path: {shown}"
+            f"{more}")]
+    return []
+
+
+_FLOAT_DTYPES = ("f16", "bf16", "f32", "f64", "f8e4m3fn", "f8e5m2")
+
+
+def _element_dtypes(type_str: str) -> List[str]:
+    # \b keeps "bf16[" from reading as "f16["
+    return re.findall(r"\b([a-z][a-z0-9]*)\[", type_str)
+
+
+def check_psum_dtype(dispatch: str, text: str,
+                     comps: Optional[Dict[str, Computation]] = None,
+                     ) -> List[Finding]:
+    """Contract 3b: every floating-point ``all-reduce`` (the packed
+    aggregation's psum, PR 3) must accumulate in f32.  Integer
+    all-reduces (the round cut's fused ledger counts) are exempt."""
+    comps = parse_hlo(text) if comps is None else comps
+    findings: List[Finding] = []
+    for comp_name, ins in _instrs(comps):
+        if not ins.opcode.startswith("all-reduce"):
+            continue
+        bad = [d for d in _element_dtypes(ins.type_str)
+               if d in _FLOAT_DTYPES and d != "f32"]
+        if bad:
+            findings.append(Finding(
+                dispatch, "dtype",
+                f"all-reduce {ins.name} (in {comp_name}) accumulates in "
+                f"{'/'.join(sorted(set(bad)))} — the packed-aggregation "
+                f"psum contract is fp32 accumulation"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Contract 4: ("clients",) sharding placement
+# ---------------------------------------------------------------------------
+
+_NUM_PARTITIONS_RE = re.compile(r"num_partitions=(\d+)")
+
+
+def partition_count(text: str) -> int:
+    m = _NUM_PARTITIONS_RE.search(text)
+    return int(m.group(1)) if m else 1
+
+
+def check_partition_count(dispatch: str, text: str, expected: int
+                          ) -> List[Finding]:
+    """Contract 4a: under a k-device client mesh the compiled module
+    must actually be SPMD-partitioned k ways — ``num_partitions=1``
+    means the whole dispatch silently fell back to one device."""
+    got = partition_count(text)
+    if got != expected:
+        return [Finding(
+            dispatch, "sharding",
+            f"compiled with num_partitions={got}, expected {expected} "
+            f"(the ('clients',) mesh) — the dispatch is not running "
+            f"SPMD over the client mesh")]
+    return []
+
+
+def check_input_shardings(dispatch: str, arg_leaves: Sequence,
+                          shardings: Sequence, fleet_dims: Iterable[int],
+                          ) -> List[Finding]:
+    """Contract 4b: every (N,)/(X,)-leading operand of the compiled
+    dispatch must be partitioned (on the ``("clients",)`` axis), never
+    fully replicated — a replicated fleet array multiplies memory and
+    collective traffic by the mesh size.
+
+    ``arg_leaves``/``shardings`` are the flattened argument leaves and
+    ``compiled.input_shardings`` of the same lowering, zipped by
+    position (post-SPMD executable metadata, the authoritative record
+    of what XLA actually did)."""
+    fleet_dims = set(int(d) for d in fleet_dims)
+    findings: List[Finding] = []
+    for i, (leaf, sh) in enumerate(zip(arg_leaves, shardings)):
+        shape = getattr(leaf, "shape", None)
+        if not shape or shape[0] not in fleet_dims:
+            continue
+        if sh.is_fully_replicated:
+            findings.append(Finding(
+                dispatch, "sharding",
+                f"operand #{i} with fleet-shaped leading dim "
+                f"{shape[0]} (shape {tuple(shape)}) is fully replicated "
+                f"— expected it partitioned on the ('clients',) mesh "
+                f"axis"))
+    return findings

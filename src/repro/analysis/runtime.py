@@ -1,0 +1,121 @@
+"""``FLConfig.debug_checks`` runtime sanitizers.
+
+Two guards, both off by default (sanitizer mode — they add one host
+sync per round, which the production round path is contractually free
+of):
+
+* :func:`make_round_guard` — a ``checkify``-instrumented jit the engine
+  calls after each server step: non-finite values in the new global
+  model or the per-client losses, and out-of-bounds cohort indices, are
+  reported with the round number instead of silently propagating NaNs
+  through the trajectory.
+* :class:`RecompilationDetector` — snapshots the compiled-signature
+  count of every memoized jitted dispatch the engine owns and raises if
+  any of them re-traces across ``run()`` calls: a re-trace means some
+  round-path input changed shape/dtype/weak-type/placement between
+  runs, which silently doubles compile time and breaks the "memoized
+  lowerings" contract the static auditor certifies.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import checkify
+
+
+class RoundCheckError(RuntimeError):
+    """A ``debug_checks`` round guard fired."""
+
+
+def make_round_guard(num_clients: int, with_idx: bool):
+    """Jitted checkify guard over the post-step round outputs.
+
+    Returns ``guard(global_params, losses[, idx]) -> checkify.Error``.
+    The cohort index is validated against ``[0, num_clients]`` — the
+    sentinel pad value equals ``num_clients`` by the ``cohort_index``
+    contract, anything else is out of bounds.
+    """
+    def body(global_params, losses, idx):
+        for i, leaf in enumerate(jax.tree.leaves(global_params)):
+            checkify.check(
+                jnp.all(jnp.isfinite(leaf)),
+                f"non-finite value in global-model leaf #{i} after the "
+                f"server step")
+        checkify.check(jnp.all(jnp.isfinite(losses)),
+                       "non-finite per-client loss")
+        if idx is not None:
+            checkify.check(
+                jnp.all((idx >= 0) & (idx <= num_clients)),
+                "cohort index out of bounds (expected [0, N] with N as "
+                "the pad sentinel)")
+        return 0
+
+    if with_idx:
+        checked = checkify.checkify(
+            lambda gp, losses, idx: body(gp, losses, idx))
+    else:
+        checked = checkify.checkify(
+            lambda gp, losses: body(gp, losses, None))
+    return jax.jit(checked)
+
+
+def throw_round_error(err: checkify.Error, rnd: int) -> None:
+    """Raise :class:`RoundCheckError` naming the round if the guard
+    tripped (this readback is the sanitizer's documented host sync)."""
+    msg = err.get()
+    if msg:
+        raise RoundCheckError(
+            f"debug_checks: round {rnd}: {msg}")
+
+
+class RecompilationDetector:
+    """Asserts the engine's memoized jitted dispatches never re-trace.
+
+    ``check()`` is called at the end of each ``run()``: the first call
+    records a baseline compiled-signature count per dispatch; any later
+    growth of an already-seen dispatch raises.  New dispatches (a
+    different policy or telemetry level building new memo entries) are
+    simply added to the baseline.
+    """
+
+    def __init__(self, engine) -> None:
+        self.engine = engine
+        self._seen: dict = {}
+
+    def _jits(self) -> Iterator[Tuple[str, object]]:
+        eng = self.engine
+        for key, fn in eng._server_steps.items():
+            yield f"server_step{key}", fn
+        for key, fns in eng._dyn_cache.items():
+            _process, init_fn, step_fn, trainer = fns
+            yield f"dynamics_init{key}", init_fn
+            yield f"dynamics_step{key}", step_fn
+            yield f"dyn_trainer{key}", trainer
+        for key, fn in eng._cut_fns.items():
+            yield f"round_cut{key}", fn
+        for key, (fn, _keys) in eng._metrics_fns.items():
+            if fn is not None:
+                yield f"metrics{key}", fn
+        for attr in ("_trainer", "_acc_fn", "_idx_fn", "_expire_fn",
+                     "_cache_reset"):
+            fn = getattr(eng, attr, None)
+            if fn is not None:
+                yield attr, fn
+
+    def check(self) -> None:
+        for name, fn in self._jits():
+            size_of = getattr(fn, "_cache_size", None)
+            if size_of is None:
+                continue
+            size = size_of()
+            prev = self._seen.get(name)
+            if prev is not None and size > prev:
+                raise RoundCheckError(
+                    f"debug_checks: jitted dispatch {name} re-traced "
+                    f"({prev} -> {size} compiled signatures) — a "
+                    f"round-path input changed shape/dtype/placement "
+                    f"between runs; the engine's memoized lowerings "
+                    f"must be trace-stable")
+            self._seen[name] = size if prev is None else max(size, prev)

@@ -340,6 +340,15 @@ class FLConfig:
     #   host syncs.  ``FleetEngine.run(telemetry=...)`` overrides per
     #   run (a level string or a ``repro.obs.Telemetry`` session with
     #   sinks/tracing attached).
+    debug_checks: bool = False
+    # ^ runtime-sanitizer mode (repro.analysis.runtime): after each
+    #   server step a checkify guard validates the new global model and
+    #   per-client losses are finite and the cohort index is in bounds,
+    #   and a recompilation detector asserts at run end that none of the
+    #   engine's memoized jitted dispatches re-traced across runs.  Adds
+    #   one host sync per round — a debugging tool, never a production
+    #   mode; the static auditor (repro.analysis.audit) verifies the
+    #   same contracts with zero runtime cost.
 
     def __post_init__(self):
         if self.telemetry not in (None, "basic", "full"):
@@ -367,6 +376,12 @@ class FLConfig:
                     f"FLConfig.adversary must be a registered adversary "
                     f"({', '.join(available_adversaries())}) or None, "
                     f"got {self.adversary!r}")
+        from repro.fleet.api import available_dynamics
+        if self.dynamics not in available_dynamics():
+            raise ValueError(
+                f"FLConfig.dynamics must be a registered dynamics "
+                f"process ({', '.join(available_dynamics())}), got "
+                f"{self.dynamics!r}")
         if self.cache_offload not in (None, "host", "discard"):
             raise ValueError(
                 f"FLConfig.cache_offload must be None, 'host' or "

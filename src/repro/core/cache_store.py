@@ -22,9 +22,9 @@ round trip:
   O(X·D) copy ever blocks the round that produced it — the only
   blocking reads are on handles whose device-to-host copies were issued
   a full dispatch earlier (counted in the stream's own
-  :class:`TransferStats` — exposed as ``FleetEngine.transfer_stats`` —
-  and mirrored into the deprecated process-wide :data:`STATS` aggregate
-  the historical transfer-count tests read).
+  :class:`TransferStats`, exposed as ``FleetEngine.transfer_stats`` —
+  counters are strictly per-engine; the old process-wide ``STATS``
+  aggregate is gone, and ``repro.analysis.lint`` rejects the pattern).
 
 ``cache_offload="discard"`` additionally drops rows whose round stamp is
 more than ``cache_staleness_bound`` rounds old (the paper's cache is
@@ -44,7 +44,7 @@ import numpy as np
 
 @dataclasses.dataclass
 class TransferStats:
-    """Per-process counters of the offload stream's host transfers.
+    """Per-stream counters of the offload stream's host transfers.
 
     ``*_async`` count *dispatches* of asynchronous copies (one per
     pytree, not per leaf); ``pre_issued_reads`` counts blocking
@@ -67,15 +67,6 @@ class TransferStats:
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
-
-
-# Deprecated process-wide aggregate.  Streams now carry their *own*
-# ``TransferStats`` (``CohortCacheStream(stats=...)`` — the engine owns
-# one per instance, exposed as ``FleetEngine.transfer_stats``), so
-# concurrent engines no longer clobber each other's counters; every
-# stream still mirrors its increments here so existing callers and the
-# historical transfer-count assertions keep working unchanged.
-STATS = TransferStats()
 
 
 def _tree_bytes(tree) -> int:
@@ -220,8 +211,7 @@ class CohortCacheStream:
         self.store = store
         self.mesh = mesh
         self.cohort_size = cohort_size
-        # per-stream counters (mirrored into the deprecated module-level
-        # aggregate ``STATS`` for back-compat)
+        # per-stream counters (the engine passes its own instance)
         self.stats = stats if stats is not None else TransferStats()
         self._pending = None
 
@@ -237,15 +227,12 @@ class CohortCacheStream:
         for leaf in jax.tree.leaves(tree):
             if isinstance(leaf, jax.Array):
                 leaf.copy_to_host_async()
-        nbytes = _tree_bytes(tree)
-        for s in (self.stats, STATS):
-            s.d2h_async += 1
-            s.d2h_bytes += nbytes
+        self.stats.d2h_async += 1
+        self.stats.d2h_bytes += _tree_bytes(tree)
 
     def _read(self, tree):
         """Blocking read of handles whose copy was pre-issued."""
         self.stats.pre_issued_reads += 1
-        STATS.pre_issued_reads += 1
         return jax.tree.map(np.asarray, tree)
 
     def fetch(self, idx, rnd: int):
@@ -257,10 +244,8 @@ class CohortCacheStream:
         sh = self._sharding(block)
         put = jax.device_put(block) if sh is None \
             else jax.device_put(block, sh)
-        nbytes = _tree_bytes(block)
-        for s in (self.stats, STATS):
-            s.h2d_async += 1
-            s.h2d_bytes += nbytes
+        self.stats.h2d_async += 1
+        self.stats.h2d_bytes += _tree_bytes(block)
         return put
 
     def stage(self, idx, write, clear, block, stamps) -> None:

@@ -519,7 +519,11 @@ class _RoundLedger:
                 else float(duration)
             self.cum_time += billed
             if evaluated:
-                self.acc = float(jax.device_get(acc_dev))
+                # the eval scalar is the one extra readback an eval
+                # boundary costs — spanned so Perfetto shows it next to
+                # ledger_resolve like every other host-sync seam
+                with self.tracer.span("eval_readback", round=rnd):
+                    self.acc = float(jax.device_get(acc_dev))
             hist = self.hist
             hist.acc.append(self.acc)
             hist.eval_mask.append(evaluated)
@@ -654,8 +658,8 @@ class FleetEngine:
         self._idx_fn = None
         self._expire_fn = None
         self._zeros_x = None
-        # per-engine transfer counters (the module-global
-        # ``cache_store.STATS`` stays as a deprecated mirror)
+        # per-engine transfer counters (strictly per-engine — the old
+        # module-global aggregate is gone)
         self._transfer_stats = core.TransferStats()
         if self.offload is not None:
             bound = fl_cfg.cache_staleness_bound \
@@ -671,6 +675,12 @@ class FleetEngine:
         # instrumented seams cost one attribute lookup on default runs
         self._metrics_fns = {}
         self._tracer = obs.NULL_TRACER
+        # debug_checks sanitizer mode (repro.analysis.runtime): checkify
+        # round guard + recompilation detector, both built lazily —
+        # default runs never import the analysis package
+        self.debug_checks = bool(fl_cfg.debug_checks)
+        self._round_guard = None
+        self._recomp_detector = None
 
     def _build_mesh(self, fl_cfg: FLConfig):
         if fl_cfg.mesh_shape is None:
@@ -774,10 +784,34 @@ class FleetEngine:
     @property
     def transfer_stats(self) -> "core.TransferStats":
         """This engine's cache-stream transfer counters (all zero when
-        no offload stream is configured).  Per-engine — unlike the
-        deprecated module-global ``cache_store.STATS`` aggregate, which
-        concurrent engines share."""
+        no offload stream is configured).  Strictly per-engine, so
+        concurrent engines never clobber each other's counts; the
+        static per-round ceiling these must respect lives in
+        ``repro.analysis.audit.transfer_ceiling``."""
         return self._transfer_stats
+
+    # -- debug_checks sanitizers (repro.analysis.runtime) --------------------
+
+    def _debug_round_check(self, global_params, losses, idx, rnd):
+        """``FLConfig.debug_checks`` round guard: checkify the post-step
+        global model / losses for non-finite values and the cohort index
+        for OOB.  Reads one error scalar back per round — the sanitizer's
+        documented host sync, never active on production runs."""
+        from repro.analysis import runtime as RT
+        if self._round_guard is None:
+            self._round_guard = RT.make_round_guard(
+                self.fl_cfg.num_clients, with_idx=idx is not None)
+        err, _ = self._round_guard(global_params, losses) if idx is None \
+            else self._round_guard(global_params, losses, idx)
+        RT.throw_round_error(err, rnd)
+
+    def _debug_recompile_check(self):
+        """``FLConfig.debug_checks`` run-end assertion: none of the
+        engine's memoized jitted dispatches re-traced across runs."""
+        from repro.analysis import runtime as RT
+        if self._recomp_detector is None:
+            self._recomp_detector = RT.RecompilationDetector(self)
+        self._recomp_detector.check()
 
     def _resolve_telemetry(self, arg):
         """``run(telemetry=...)`` -> ``Telemetry | None``.
@@ -1035,6 +1069,8 @@ class FleetEngine:
             state, global_params, caches = rounds_loop(
                 policy, state, fleet, hist, global_params, caches, rng,
                 n_rounds, time_budget, eval_every, progress, tel)
+        if self.debug_checks:
+            self._debug_recompile_check()
 
         # a time_budget break can land between eval boundaries, leaving
         # the final booked round with a stale carried-forward (or NaN)
@@ -1273,6 +1309,8 @@ class FleetEngine:
             else:
                 global_params, caches = out
 
+            if self.debug_checks:
+                self._debug_round_check(global_params, losses, None, rnd)
             with tracer.span("observe", round=rnd):
                 state = policy.observe(
                     state, plan,
@@ -1636,6 +1674,10 @@ class FleetEngine:
                                      losses=losses_n, durations=times_n,
                                      duration=t_cut, rnd=rnd)
 
+            if self.debug_checks:
+                self._debug_round_check(
+                    global_params, report.losses,
+                    None if self.cohort is None else idx, rnd)
             with tracer.span("observe", round=rnd):
                 state = policy.observe(state, plan, report)
 

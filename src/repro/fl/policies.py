@@ -90,6 +90,9 @@ def _flude_update_jit(fl_cfg):
 
 @register_policy("flude")
 class FludePolicy(Policy):
+    """The paper's policy: Beta-belief dependability selection (Alg. 1),
+    adaptive staleness/quorum control (Alg. 2) and C3 cache resume, all
+    planned on device in one fused jitted dispatch per round."""
     uses_cache = True
     # Alg. 2 line 3 caps X at clients_per_round before budget shrinking
     selects_at_most_clients_per_round = True

@@ -26,6 +26,10 @@ _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
     "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+    # fp8 fnuz variants + sub-byte ints (stored 1 byte/elem in HBM,
+    # matching the s4/u4 convention above)
+    "f8e4m3fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3b11fnuz": 1, "f8e3m4": 1,
+    "f8e4m3": 1, "s2": 1, "u2": 1,
 }
 
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
@@ -298,6 +302,15 @@ def analyze_computation(comp: Computation, comps: Dict[str, Computation],
         elif op in _ELEMWISE:
             cost.flops += ins.out_elems
             cost.bytes += ins.out_bytes + _operand_bytes(ins, comp)
+        elif op == "copy-start":
+            # async copy pair: the transfer is charged once here — read
+            # the source + write the destination.  The tuple output
+            # (dest, source-alias, context) must not be summed as
+            # traffic, and copy-done below is only the completion
+            # handle; the old fall-through charged the pair ~6x.
+            cost.bytes += 2.0 * _operand_bytes(ins, comp)
+        elif op == "copy-done":
+            continue
         elif op == "dynamic-slice":
             # reads only the slice (+indices), not the whole operand
             cost.bytes += 2.0 * ins.out_bytes

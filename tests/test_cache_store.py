@@ -275,9 +275,9 @@ def test_stream_never_blocks_a_round(data):
     fl = dataclasses.replace(FL, cache_offload="host")
     engine = FleetEngine(data, SIM, fl)
     engine.run("flude", diagnostics=False)          # compile + place
-    CS.STATS.reset()
+    engine.transfer_stats.reset()
     engine.run("flude", rounds=3, diagnostics=False)
-    s = CS.STATS.snapshot()
+    s = engine.transfer_stats.snapshot()
     assert s["sync_copies"] == 0
     # per round: one d2h dispatch for the fetch's idx + one for the
     # staged write-back; one h2d for the fetched block
@@ -295,9 +295,9 @@ def test_stream_transfers_round_count_independent(data):
     engine.run("flude", diagnostics=False)
     per_run = []
     for rounds in (1, 3):
-        CS.STATS.reset()
+        engine.transfer_stats.reset()
         engine.run("flude", rounds=rounds, diagnostics=False)
-        per_run.append(CS.STATS.snapshot())
+        per_run.append(engine.transfer_stats.snapshot())
     assert per_run[0]["d2h_async"] * 3 == per_run[1]["d2h_async"]
     assert per_run[0]["h2d_async"] * 3 == per_run[1]["h2d_async"]
     # every h2d payload is one (X, ...) block (+ negligible (X,) masks)
@@ -312,9 +312,8 @@ def test_no_stream_transfers_without_cache(data):
     offload engine feeds the trainer a constant zeros block."""
     fl = dataclasses.replace(FL, cache_offload="host")
     engine = FleetEngine(data, SIM, fl)
-    CS.STATS.reset()
     engine.run("random", diagnostics=False)
-    assert CS.STATS.snapshot() == CS.TransferStats().snapshot()
+    assert engine.transfer_stats.snapshot() == CS.TransferStats().snapshot()
     assert len(engine.cache_store) == 0
 
 
@@ -432,7 +431,6 @@ import json
 import jax
 
 from repro.configs.base import FLConfig
-from repro.core import cache_store as CS
 from repro.data.synthetic import federated_classification
 from repro.fl import FleetEngine, SimConfig
 
@@ -445,7 +443,6 @@ for pol, x in (("flude", 8), ("mifa", 32)):
     fl = FLConfig(num_clients=n, clients_per_round=8, dynamics="markov",
                   mesh_shape=(8,), cohort_size=x)
     ref = FleetEngine(data, sim, fl).run(pol, diagnostics=False)
-    CS.STATS.reset()
     engine = FleetEngine(data, sim,
                          dataclasses.replace(fl, cache_offload="host"))
     h = engine.run(pol, diagnostics=False)
@@ -454,7 +451,7 @@ for pol, x in (("flude", 8), ("mifa", 32)):
                        and h.wall_clock == ref.wall_clock
                        and h.received == ref.received
                        and h.selected == ref.selected),
-        "sync_copies": CS.STATS.sync_copies,
+        "sync_copies": engine.transfer_stats.sync_copies,
         "store_rows": len(engine.cache_store),
     }
 print(json.dumps(out))

@@ -85,11 +85,12 @@ def test_registry_unknown_and_duplicates():
         FAPI._REGISTRY.pop("_test_dyn", None)
 
 
-def test_engine_rejects_unknown_dynamics():
-    data, sim, fl = _setup()
-    bad = dataclasses.replace(fl, dynamics="nope")
-    with pytest.raises(KeyError, match="unknown dynamics"):
-        FleetEngine(data, sim, bad)
+def test_unknown_dynamics_rejected_at_config_construction():
+    _data, _sim, fl = _setup()
+    # __post_init__ name-validates the registry axis, so a bad name
+    # never reaches the engine (dataclasses.replace re-runs it)
+    with pytest.raises(ValueError, match="dynamics"):
+        dataclasses.replace(fl, dynamics="nope")
 
 
 # ---------------------------------------------------------------------------
